@@ -1,0 +1,49 @@
+"""Fig 4: queue time / JCT / samples-per-second on NewWorkload (30 & 60
+task queues) — Frenzy vs opportunistic scheduling."""
+from __future__ import annotations
+
+import copy
+
+from repro.cluster import (FrenzyScheduler, OpportunisticScheduler, simulate)
+from repro.cluster.schedulers import ElasticFlowScheduler
+from repro.cluster.traces import new_workload
+from repro.core.orchestrator import make_cluster, PAPER_SIM_CLUSTER
+
+
+def run(n_tasks_list=(30, 60), seed: int = 1,
+        mean_interarrival: float = 30.0):
+    nodes = make_cluster(PAPER_SIM_CLUSTER)
+    types = sorted({n.device_type for n in nodes})
+    rows = []
+    summary = {}
+    for n_tasks in n_tasks_list:
+        jobs = new_workload(n_tasks, types, seed=seed,
+                            mean_interarrival=mean_interarrival)
+        for sched in (FrenzyScheduler(), OpportunisticScheduler(),
+                      ElasticFlowScheduler()):
+            r = simulate(copy.deepcopy(jobs), copy.deepcopy(nodes), sched)
+            rows.append((f"jct_new/{sched.name}/n{n_tasks}/avg_jct_s",
+                         r.avg_jct * 1e6, r.avg_jct))
+            rows.append((f"jct_new/{sched.name}/n{n_tasks}/avg_qt_s",
+                         r.avg_queue_time * 1e6, r.avg_queue_time))
+            rows.append((f"jct_new/{sched.name}/n{n_tasks}/samples_per_s",
+                         0.0, r.avg_samples_per_s))
+            summary[(sched.name, n_tasks)] = r
+    for n_tasks in n_tasks_list:
+        f = summary[("frenzy", n_tasks)]
+        o = summary[("opportunistic", n_tasks)]
+        rows.append((f"jct_new/jct_reduction_vs_opportunistic/n{n_tasks}",
+                     0.0, round(1 - f.avg_jct / o.avg_jct, 4)))
+        rows.append((f"jct_new/sps_gain_vs_opportunistic/n{n_tasks}",
+                     0.0, round(f.avg_samples_per_s / o.avg_samples_per_s - 1,
+                                4)))
+    return rows
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

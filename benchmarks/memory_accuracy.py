@@ -1,0 +1,53 @@
+"""Fig 6: MARP memory-prediction accuracy vs XLA ground truth.
+
+Runs ``repro.launch.memcheck`` in a subprocess (it needs its own
+XLA_FLAGS device count) and summarises per-combo accuracies."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(__file__)
+OUT = os.path.join(HERE, "../experiments/memcheck")
+
+
+def ensure(zero: int = 0, force: bool = False):
+    path = os.path.join(OUT, f"memcheck_zero{zero}.json")
+    if force or not os.path.exists(path):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(HERE, "../src")
+        env.pop("XLA_FLAGS", None)
+        subprocess.run([sys.executable, "-m", "repro.launch.memcheck",
+                        "--zero", str(zero)] + (["--force"] if force else []),
+                       check=True, env=env)
+    with open(path) as f:
+        return json.load(f)
+
+
+def run():
+    rows = []
+    data = ensure(zero=0)
+    accs_e, accs_p = [], []
+    for r in data:
+        tag = f"{r['arch']}/b{r['batch']}d{r['d']}t{r['t']}"
+        rows.append((f"memory_accuracy/{tag}/exact", 0.0, r["acc_exact"]))
+        rows.append((f"memory_accuracy/{tag}/paper", 0.0, r["acc_paper"]))
+        accs_e.append(r["acc_exact"])
+        accs_p.append(r["acc_paper"])
+    rows.append(("memory_accuracy/mean_exact", 0.0,
+                 round(sum(accs_e) / len(accs_e), 4)))
+    rows.append(("memory_accuracy/min_exact", 0.0, round(min(accs_e), 4)))
+    rows.append(("memory_accuracy/mean_paper", 0.0,
+                 round(sum(accs_p) / len(accs_p), 4)))
+    return rows
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

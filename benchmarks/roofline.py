@@ -1,0 +1,114 @@
+"""Roofline analysis (deliverable g): read the dry-run JSON cache and derive
+the three terms per (arch x shape x mesh):
+
+    compute    = HLO_FLOPs / (chips x 197 TF)      [per-device FLOPs / chip peak]
+    memory     = HLO_bytes / (chips x 819 GB/s)    [per-device bytes / chip BW]
+    collective = coll_bytes / (chips x 50 GB/s)    [per-device traffic / link BW]
+
+HLO figures from repro.launch.hlo_analysis are PER-DEVICE (post-partitioning
+shapes), so each term divides by per-chip capability — equivalent to the
+spec's global/(chips x peak) form.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Dict, List, Optional
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import ARCHS
+from repro.core.devices import TPU_PEAK_FLOPS, TPU_HBM_BW, TPU_ICI_BW
+from repro.models import active_param_count
+
+HERE = os.path.dirname(__file__)
+DRYRUN_DIR = os.path.join(HERE, "../experiments/dryrun")
+
+
+def model_flops(arch: str, shape_name: str, n_micro_steps: int = 1) -> float:
+    """Useful FLOPs per executed step: 6·N_active·D for train (fwd+bwd),
+    2·N_active·D for inference."""
+    cfg = ARCHS[arch]
+    shape = INPUT_SHAPES[shape_name]
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch                     # one new token per seq
+    return 2.0 * n_active * tokens
+
+
+def analyze_record(rec: dict) -> Optional[dict]:
+    if not rec.get("ok"):
+        return None
+    n_dev = rec["n_devices"]
+    hlo = rec["hlo"]
+    t_compute = hlo["flops"] / TPU_PEAK_FLOPS       # per-device flops / peak
+    t_memory = hlo["hbm_bytes"] / TPU_HBM_BW
+    t_coll = hlo["total_collective_bytes"] / TPU_ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / (hlo["flops"] * n_dev) if hlo["flops"] else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "bytes_per_device_gib": rec["bytes_per_device"] / 2 ** 30,
+        "fits_16g": rec["bytes_per_device"] < 16 * 2 ** 30,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "useful_flops_ratio": useful,
+        "step_lower_bound_s": max(terms.values()),
+    }
+
+
+def load_all(dryrun_dir: str = DRYRUN_DIR, mesh: str = "16x16",
+             tag: str = "") -> List[dict]:
+    out = []
+    if not os.path.isdir(dryrun_dir):
+        return out
+    for fname in sorted(os.listdir(dryrun_dir)):
+        if not fname.endswith(f"__{mesh}{tag}.json"):
+            continue
+        with open(os.path.join(dryrun_dir, fname)) as f:
+            rec = json.load(f)
+        row = analyze_record(rec)
+        if row:
+            out.append(row)
+    return out
+
+
+def run():
+    rows = []
+    for r in load_all():
+        key = f"roofline/{r['arch']}/{r['shape']}"
+        rows.append((f"{key}/dominant={r['dominant']}",
+                     r["step_lower_bound_s"] * 1e6,
+                     round(r["useful_flops_ratio"], 4)))
+    return rows
+
+
+def table(mesh: str = "16x16", tag: str = "") -> str:
+    rows = load_all(mesh=mesh, tag=tag)
+    lines = [f"| arch | shape | GiB/dev | fits | compute s | memory s |"
+             f" collective s | dominant | useful-FLOPs |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['bytes_per_device_gib']:.2f}"
+            f" | {'Y' if r['fits_16g'] else 'N'}"
+            f" | {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e}"
+            f" | {r['t_collective_s']:.3e} | {r['dominant']}"
+            f" | {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark driver — one module per paper table/figure plus the roofline.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <prefix>] [--skip-slow]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--skip-slow", action="store_true",
+                    help="skip the memcheck subprocess (XLA compiles)")
+    args = ap.parse_args()
+
+    from benchmarks import (jct_newworkload, jct_traces, kernels,
+                            memory_accuracy, roofline, sched_overhead)
+    suites = [
+        ("sched_overhead", sched_overhead.run),        # Fig 5a
+        ("jct_new", jct_newworkload.run),              # Fig 4
+        ("jct_traces", jct_traces.run),                # Fig 5b
+        ("roofline", roofline.run),                    # deliverable g
+        ("kernels", kernels.run),
+    ]
+    if not args.skip_slow:
+        suites.insert(0, ("memory_accuracy", memory_accuracy.run))  # Fig 6
+
+    failed = []
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if args.only and not name.startswith(args.only):
+            continue
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failed.append((name, e))
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {[n for n, _ in failed]}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Fig 5a: scheduling overhead vs queue depth — Frenzy HAS vs Sia-like ILP."""
+from __future__ import annotations
+
+import copy
+import time
+
+from repro.cluster.schedulers import FrenzyScheduler, SiaScheduler
+from repro.cluster.traces import new_workload
+from repro.core.orchestrator import make_cluster, PAPER_SIM_CLUSTER
+
+
+def run(queue_depths=(4, 8, 16, 32, 48), repeats: int = 3):
+    nodes = make_cluster(PAPER_SIM_CLUSTER)
+    types = sorted({n.device_type for n in nodes})
+    rows = []
+    for n_jobs in queue_depths:
+        jobs = new_workload(n_jobs, types, seed=11, mean_interarrival=0.001)
+        nodes_by_id = {n.node_id: n for n in nodes}
+        for sched_cls in (FrenzyScheduler, SiaScheduler):
+            sched = sched_cls()
+            best = float("inf")
+            for _ in range(repeats):
+                queued = copy.deepcopy(jobs)
+                for n in nodes_by_id.values():
+                    n.idle = n.total
+                t0 = time.perf_counter()
+                sched.schedule(list(queued), nodes_by_id)
+                best = min(best, time.perf_counter() - t0)
+            rows.append((f"sched_overhead/{sched.name}/q{n_jobs}",
+                         best * 1e6, n_jobs))
+    return rows
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Quickstart: the Frenzy serverless experience in 30 lines.
+
+Submit a model + training config — no device counts, no GPU types.  MARP
+predicts the memory/resource envelope, HAS places the job on a simulated
+heterogeneous cluster, and (here, at smoke scale) the training loop runs
+for a few steps on the local devices.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_arch, smoke_config
+from repro.core.orchestrator import Orchestrator, make_cluster, \
+    PAPER_SIM_CLUSTER
+from repro.core.serverless import submit
+from repro.launch.train import main as train_main
+
+# ---- 1. serverless submission: "here is my model, train it" -------------
+orch = Orchestrator(make_cluster(PAPER_SIM_CLUSTER))
+result = submit(orch, get_arch("gpt2-350m"),
+                TrainConfig(global_batch=32, seq_len=1024))
+print("=== serverless submission ===")
+print(f"MARP produced {len(result.plans)} feasible plans; best 3:")
+for p in result.plans[:3]:
+    print(f"  d={p.d:2d} t={p.t} -> {p.n_devices:2d} x {p.device_type}"
+          f" (>= {p.min_mem_gb:.1f} GB/device)")
+print(result.describe())
+
+# ---- 2. the same code path actually trains (smoke scale on CPU) ---------
+print("\n=== smoke-scale training on local devices ===")
+losses = train_main(["--arch", "gpt2-350m", "--smoke", "--steps", "12",
+                     "--batch", "4", "--seq", "128", "--log-every", "4"])
+print(f"quickstart done; loss {losses[0]:.3f} -> {losses[-1]:.3f}")

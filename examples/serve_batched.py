@@ -1,0 +1,54 @@
+"""Batched serving example: prefill a batch of prompts on a smoke-scale
+llama-family model, then decode tokens step by step with the ring KV cache.
+
+    PYTHONPATH=src python examples/serve_batched.py --batch 4 --gen 24
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import smoke_config
+from repro.models import init_params
+from repro.serve import prefill, serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, jnp.int32)
+    cache_len = args.prompt_len + args.gen + cfg.num_modal_tokens
+
+    t0 = time.time()
+    logits, cache = prefill(cfg, params, {"tokens": prompts}, cache_len)
+    print(f"prefill {args.batch}x{args.prompt_len} in {time.time()-t0:.2f}s")
+
+    step = jax.jit(lambda p, t, c, pos: serve_step(cfg, p, t, c, pos))
+    tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
+    outs = [tok]
+    pos0 = args.prompt_len + cfg.num_modal_tokens
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache = step(params, tok, cache, jnp.int32(pos0 + i))
+        tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
+        outs.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(outs, axis=1)
+    print(f"decoded {args.batch}x{args.gen} tokens in {dt:.2f}s"
+          f" ({args.batch * args.gen / dt:.1f} tok/s)")
+    for b in range(min(args.batch, 2)):
+        print(f"  seq {b}: {gen[b, :16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Minimal pytree checkpointing (single-host npz + structure manifest).
+
+On a real multi-pod deployment this would be an async, per-shard writer;
+the interface (save / restore / latest_step) is what the train loop codes
+against, and the npz backend is sufficient for CPU-scale runs and tests.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree: Any) -> str:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+
+    def to_np(l):
+        a = np.asarray(l)
+        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+            # npz cannot store bf16 — widen; restore() casts back via `like`
+            a = np.asarray(jnp.asarray(l).astype(jnp.float32))
+        return a
+
+    arrs = {f"leaf_{i}": to_np(l) for i, l in enumerate(leaves)}
+    np.savez(fname + ".tmp.npz", **arrs)
+    os.replace(fname + ".tmp.npz", fname)
+    with open(os.path.join(path, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "n_leaves": len(leaves),
+                   "step": step}, f)
+    return fname
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(path)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, like: Any) -> Any:
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    data = np.load(fname)
+    leaves, treedef = _flatten(like)
+    assert len(leaves) == len(data.files), "checkpoint/tree mismatch"
+    new = [jnp.asarray(data[f"leaf_{i}"]).astype(l.dtype)
+           for i, l in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, new)

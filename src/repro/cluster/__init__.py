@@ -1,0 +1,4 @@
+from repro.cluster.simulator import SimJob, SimResult, simulate  # noqa: F401
+from repro.cluster.schedulers import (  # noqa: F401
+    FrenzyScheduler, OpportunisticScheduler, SiaScheduler,
+)

@@ -1,0 +1,228 @@
+"""Schedulers for the simulator: Frenzy (MARP+HAS), Sia-like ILP baseline,
+and Opportunistic/FCFS (Lyra-style) baseline (paper §V-A-c)."""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.devices import DEVICE_TYPES
+from repro.core.has import Node, schedule as has_schedule
+from repro.core.marp import ResourcePlan
+from repro.cluster.simulator import Scheduler, SimJob, job_rate
+
+
+def _clone_nodes(nodes: Dict[str, Node]) -> Dict[str, Node]:
+    return {k: copy.copy(v) for k, v in nodes.items()}
+
+
+class FrenzyScheduler(Scheduler):
+    """MARP's ranked plans + HAS best-fit placement, FIFO order."""
+    name = "frenzy"
+
+    def schedule(self, queued, nodes):
+        work = _clone_nodes(nodes)
+        out = []
+        for job in sorted(queued, key=lambda j: (j.arrival, j.job_id)):
+            alloc = has_schedule(job.plans, list(work.values()))
+            if alloc is None:
+                continue                    # backfill: later jobs may fit
+            for node_id, k in alloc.placements:
+                work[node_id].idle -= k
+            out.append((job, alloc.placements, alloc.plan.d, alloc.plan.t))
+        return out
+
+
+class OpportunisticScheduler(Scheduler):
+    """FCFS; always grabs the computationally strongest idle devices first
+    for the user-specified device count (Lyra-style opportunistic)."""
+    name = "opportunistic"
+
+    def schedule(self, queued, nodes):
+        work = _clone_nodes(nodes)
+        total = sum(n.total for n in nodes.values())
+        out = []
+        for job in sorted(queued, key=lambda j: (j.arrival, j.job_id)):
+            # manual trial-and-error: the user walks the plan list until one
+            # is physically satisfiable by this cluster's device classes
+            plan = None
+            for cand_plan in job.plans:
+                fit = sum(n.total for n in nodes.values()
+                          if n.mem >= cand_plan.min_mem)
+                if fit >= cand_plan.n_devices:
+                    plan = cand_plan
+                    break
+            if plan is None:
+                break
+            # user-specified count (the manual pick), clamped to the cluster
+            need = min(job.requested_n or plan.n_devices, total)
+            min_mem = plan.min_mem
+            # strongest devices first, ignore fragmentation/locality
+            cand = sorted(work.values(),
+                          key=lambda n: -DEVICE_TYPES[n.device_type].flops)
+            placements: List[Tuple[str, int]] = []
+            left = need
+            for n in cand:
+                if n.mem < min_mem or n.idle == 0:
+                    continue
+                take = min(n.idle, left)
+                placements.append((n.node_id, take))
+                left -= take
+                if left == 0:
+                    break
+            if left > 0:
+                break                               # FCFS blocking
+            for node_id, k in placements:
+                work[node_id].idle -= k
+            d = plan.d if plan else need
+            t = plan.t if plan else 1
+            out.append((job, tuple(placements), d, t))
+        return out
+
+
+class ElasticFlowScheduler(Scheduler):
+    """ElasticFlow-style [ASPLOS'23] admission-control baseline (paper
+    §III-A-1): homogeneous-minded serverless scaling — picks the smallest
+    feasible plan, then grows it while idle devices remain (elastic
+    scale-out), but is memory/heterogeneity-blind: it treats every device
+    class as interchangeable and only checks counts, so placements can land
+    on slow classes (the deficiency the paper attributes to it)."""
+    name = "elasticflow"
+
+    def schedule(self, queued, nodes):
+        work = _clone_nodes(nodes)
+        out = []
+        for job in sorted(queued, key=lambda j: (j.arrival, j.job_id)):
+            if not job.plans:
+                continue
+            idle = sum(n.idle for n in work.values())
+            # smallest feasible plan, grown to the largest same-type plan
+            # that still fits the idle pool
+            cands = sorted(job.plans, key=lambda p: p.n_devices)
+            plan = next((p for p in cands if p.n_devices <= idle), None)
+            if plan is None:
+                break
+            for p in reversed(cands):           # elastic scale-out
+                if p.n_devices <= idle and p.min_mem <= plan.min_mem * 2:
+                    plan = p
+                    break
+            placements: List[Tuple[str, int]] = []
+            left = plan.n_devices
+            for n in sorted(work.values(), key=lambda n: -n.idle):
+                if n.idle == 0 or n.mem < plan.min_mem:
+                    continue
+                take = min(n.idle, left)
+                placements.append((n.node_id, take))
+                left -= take
+                if left == 0:
+                    break
+            if left > 0:
+                break
+            for node_id, kk in placements:
+                work[node_id].idle -= kk
+            out.append((job, tuple(placements), plan.d, plan.t))
+        return out
+
+
+class SiaScheduler(Scheduler):
+    """Sia-like goodput-optimising ILP (branch & bound, exact up to a node
+    budget).  Each queued job has candidate configs (device type, count,
+    d, t, rate); the ILP maximises total rate subject to per-type idle
+    counts — this is the expensive search the paper contrasts with HAS
+    (Fig 5a)."""
+    name = "sia"
+
+    def __init__(self, max_nodes: int = 2_000_000, max_configs: int = 6):
+        self.max_nodes = max_nodes
+        self.max_configs = max_configs
+
+    def schedule(self, queued, nodes):
+        if not queued:
+            return []
+        # idle devices per type, and nodes per type for final placement
+        idle_by_type: Dict[str, int] = {}
+        for n in nodes.values():
+            idle_by_type[n.device_type] = idle_by_type.get(n.device_type, 0) + n.idle
+        types = sorted(idle_by_type)
+        jobs = sorted(queued, key=lambda j: (j.arrival, j.job_id))
+
+        # candidate configs per job: (type_idx, n, d, t, rate).  Sia
+        # schedules at the user-specified GPU count (paper §V-A-c): it
+        # optimises placement across types but cannot right-size the job.
+        cands: List[List[Tuple[int, int, int, int, float]]] = []
+        for job in jobs:
+            cj = []
+            plans = job.plans
+            if job.requested_n:
+                fixed = [p for p in plans if p.n_devices == job.requested_n]
+                if fixed:
+                    plans = fixed
+            for plan in plans:
+                if plan.device_type not in idle_by_type:
+                    continue
+                ti = types.index(plan.device_type)
+                dev = DEVICE_TYPES[plan.device_type]
+                if dev.mem < plan.min_mem:
+                    continue
+                from repro.core.marp import _tp_efficiency, _dp_efficiency, \
+                    _active_analytic
+                fps = 6.0 * _active_analytic(job.cfg) * job.seq_len
+                rate = (plan.n_devices * dev.flops * 0.45
+                        * _tp_efficiency(plan.t, dev)
+                        * _dp_efficiency(plan.d) / fps)
+                cj.append((ti, plan.n_devices, plan.d, plan.t, rate))
+            cj.sort(key=lambda c: -c[4])
+            cands.append(cj[:self.max_configs])
+
+        best = {"score": -1.0, "choice": None, "nodes": 0}
+
+        def bound(i: int) -> float:
+            return sum(max((c[4] for c in cands[k]), default=0.0)
+                       for k in range(i, len(jobs)))
+
+        def rec(i: int, avail: Tuple[int, ...], score: float,
+                choice: Tuple[Optional[int], ...]):
+            if best["nodes"] > self.max_nodes:
+                return
+            best["nodes"] += 1
+            if i == len(jobs):
+                if score > best["score"]:
+                    best["score"] = score
+                    best["choice"] = choice
+                return
+            if score + bound(i) <= best["score"]:
+                return                              # prune
+            for ci, (ti, n, d, t, rate) in enumerate(cands[i]):
+                if avail[ti] >= n:
+                    na = list(avail)
+                    na[ti] -= n
+                    rec(i + 1, tuple(na), score + rate, choice + (ci,))
+            rec(i + 1, avail, score, choice + (None,))   # skip job
+
+        rec(0, tuple(idle_by_type[t] for t in types), 0.0, ())
+
+        out = []
+        if best["choice"] is None:
+            return out
+        work = _clone_nodes(nodes)
+        for job, ci in zip(jobs, best["choice"]):
+            if ci is None:
+                continue
+            ti, n, d, t, rate = cands[jobs.index(job)][ci]
+            dtype = types[ti]
+            placements: List[Tuple[str, int]] = []
+            left = n
+            # densest nodes of that type first
+            for node in sorted((x for x in work.values()
+                                if x.device_type == dtype and x.idle > 0),
+                               key=lambda x: -x.idle):
+                take = min(node.idle, left)
+                placements.append((node.node_id, take))
+                node.idle -= take
+                left -= take
+                if left == 0:
+                    break
+            if left > 0:
+                continue                            # resources raced away
+            out.append((job, tuple(placements), d, t))
+        return out

@@ -1,0 +1,149 @@
+"""Event-driven heterogeneous-cluster simulator (paper §V).
+
+Jobs arrive over time, a pluggable scheduler decides placement, and the
+simulator advances a virtual clock computing queue time / JCT / aggregate
+samples-per-second.  The throughput model is synchronous data parallel:
+a job's rate is ``n_devices x min(per-device rate) x efficiency terms``
+(tensor-parallel link penalty, data-parallel scaling penalty, cross-node
+penalty) — the same structure MARP's ranking uses, so Frenzy's plan priority
+is *consistent* with the simulated world (as in the paper, where MARP's
+estimates come from the same profiles the testbed exhibits).
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.devices import DEVICE_TYPES
+from repro.core.has import Node
+from repro.core.marp import ResourcePlan, _tp_efficiency, _dp_efficiency, \
+    _active_analytic
+
+
+@dataclass
+class SimJob:
+    job_id: int
+    arrival: float
+    cfg: ModelConfig
+    global_batch: int
+    seq_len: int
+    total_samples: int                      # work to do
+    plans: Sequence[ResourcePlan] = ()      # filled by MARP for Frenzy
+    requested_n: int = 0                    # user-specified count (baselines)
+    # runtime state
+    start_time: float = -1.0
+    finish_time: float = -1.0
+    placements: Tuple[Tuple[str, int], ...] = ()
+    rate: float = 0.0                       # samples/s while running
+
+    @property
+    def queue_time(self) -> float:
+        return self.start_time - self.arrival
+
+    @property
+    def jct(self) -> float:
+        return self.finish_time - self.arrival
+
+
+@dataclass
+class SimResult:
+    jobs: List[SimJob]
+    sched_time_s: float                     # wall time inside the scheduler
+    sched_calls: int
+    makespan: float
+
+    @property
+    def avg_jct(self) -> float:
+        return sum(j.jct for j in self.jobs) / len(self.jobs)
+
+    @property
+    def avg_queue_time(self) -> float:
+        return sum(j.queue_time for j in self.jobs) / len(self.jobs)
+
+    @property
+    def avg_samples_per_s(self) -> float:
+        return sum(j.total_samples / max(j.finish_time - j.start_time, 1e-9)
+                   for j in self.jobs) / len(self.jobs)
+
+
+def job_rate(job: SimJob, placements: Sequence[Tuple[str, int]],
+             nodes: Dict[str, Node], d: int, t: int) -> float:
+    """Samples/s of a placed job (synchronous DP: slowest device gates)."""
+    devs = []
+    for node_id, k in placements:
+        devs.extend([nodes[node_id].device_type] * k)
+    slowest = min(DEVICE_TYPES[dt].flops for dt in devs)
+    dev = DEVICE_TYPES[devs[0]]
+    n_active = _active_analytic(job.cfg)
+    flops_per_sample = 6.0 * n_active * job.seq_len
+    eff = 0.45 * _tp_efficiency(t, dev) * _dp_efficiency(d)
+    if len({nid for nid, _ in placements}) > 1:
+        eff *= 0.75                          # cross-node penalty
+    return len(devs) * slowest * eff / flops_per_sample
+
+
+class Scheduler:
+    """Interface: mutate cluster idle counts via returned placements."""
+    name = "base"
+
+    def schedule(self, queued: List[SimJob], nodes: Dict[str, Node]
+                 ) -> List[Tuple[SimJob, Tuple[Tuple[str, int], ...], int, int]]:
+        """Return [(job, placements, d, t)] to start now."""
+        raise NotImplementedError
+
+
+def simulate(jobs: Sequence[SimJob], nodes: Sequence[Node],
+             scheduler: Scheduler, charge_overhead: bool = True) -> SimResult:
+    """charge_overhead: add measured scheduler wall time to the virtual
+    clock (the paper's Fig 5a overhead feeds its JCT comparison)."""
+    nodes_by_id = {n.node_id: n for n in nodes}
+    for n in nodes_by_id.values():
+        n.idle = n.total
+    events: List[Tuple[float, int, str, SimJob]] = []
+    for j in jobs:
+        heapq.heappush(events, (j.arrival, j.job_id, "arrive", j))
+    queued: List[SimJob] = []
+    sched_time = 0.0
+    sched_calls = 0
+    makespan = 0.0
+    seq = len(jobs)
+
+    def run_scheduler(now: float):
+        nonlocal sched_time, sched_calls, seq
+        t0 = time.perf_counter()
+        decisions = scheduler.schedule(queued, nodes_by_id)
+        elapsed = time.perf_counter() - t0
+        sched_time += elapsed
+        sched_calls += 1
+        start = now + (elapsed if charge_overhead else 0.0)
+        for job, placements, d, t in decisions:
+            for node_id, k in placements:
+                assert nodes_by_id[node_id].idle >= k
+                nodes_by_id[node_id].idle -= k
+            job.placements = placements
+            job.start_time = start
+            job.rate = job_rate(job, placements, nodes_by_id, d, t)
+            finish = start + job.total_samples / job.rate
+            job.finish_time = finish
+            queued.remove(job)
+            seq += 1
+            heapq.heappush(events, (finish, seq, "finish", job))
+
+    while events:
+        now, _, kind, job = heapq.heappop(events)
+        makespan = max(makespan, now)
+        if kind == "arrive":
+            queued.append(job)
+            run_scheduler(now)
+        else:  # finish
+            for node_id, k in job.placements:
+                nodes_by_id[node_id].idle += k
+            if queued:
+                run_scheduler(now)
+    unfinished = [j for j in jobs if j.finish_time < 0]
+    assert not unfinished, f"{len(unfinished)} jobs never scheduled"
+    return SimResult(jobs=list(jobs), sched_time_s=sched_time,
+                     sched_calls=sched_calls, makespan=makespan)

@@ -1,0 +1,18 @@
+"""Mamba2-130M [arXiv:2405.21060] — attention-free SSD (state-space duality)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,                      # Mamba2 block subsumes the MLP
+    vocab_size=50280,
+    attention="none",
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,             # 24 SSD heads
+)

@@ -1,0 +1,7 @@
+# The paper's primary contribution: MARP (memory-aware resource prediction),
+# HAS (heterogeneity-aware scheduling), the resource orchestrator, and the
+# serverless submission API.
+from repro.core.marp import ResourcePlan, predict_plans, required_devices  # noqa: F401
+from repro.core.has import Node, Allocation, schedule, select_plan, place  # noqa: F401
+from repro.core.orchestrator import Orchestrator, make_cluster  # noqa: F401
+from repro.core.serverless import submit, SubmitResult  # noqa: F401

@@ -1,0 +1,44 @@
+"""Accelerator catalog — the heterogeneous device types MARP/HAS plan over.
+
+The paper's cluster uses NVIDIA GPUs; the TPU entries are the hardware
+adaptation (DESIGN.md §3).  ``flops`` is peak dense bf16/fp16 tensor
+throughput; ``hbm_bw`` bytes/s; ``link_bw`` bytes/s per chip of intra-node
+interconnect (NVLink / ICI).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class DeviceType:
+    name: str
+    mem: int                 # bytes of HBM
+    flops: float             # peak bf16 FLOP/s
+    hbm_bw: float            # bytes/s
+    link_bw: float           # bytes/s per chip intra-node (NVLink/ICI)
+    inter_bw: float          # bytes/s per chip cross-node (PCIe+IB / DCN)
+
+
+GB = 1024 ** 3
+TF = 1e12
+
+DEVICE_TYPES: Dict[str, DeviceType] = {
+    # --- paper's GPU catalog ---
+    "A100-40G":  DeviceType("A100-40G",  40 * GB, 312 * TF, 1.55e12, 600e9, 64e9),
+    "A100-80G":  DeviceType("A100-80G",  80 * GB, 312 * TF, 2.0e12,  600e9, 64e9),
+    "A800-80G":  DeviceType("A800-80G",  80 * GB, 312 * TF, 2.0e12,  400e9, 64e9),
+    "RTX2080Ti": DeviceType("RTX2080Ti", 11 * GB, 26.9 * TF, 616e9,  32e9,  16e9),
+    "RTX6000":   DeviceType("RTX6000",   24 * GB, 130 * TF, 672e9,   32e9,  16e9),
+    "RTX3090":   DeviceType("RTX3090",   24 * GB, 71 * TF,  936e9,   32e9,  16e9),
+    # --- TPU adaptation (target hardware of this reproduction) ---
+    "v5e":       DeviceType("v5e",       16 * GB, 197 * TF, 819e9,   50e9,  25e9),
+    "v4":        DeviceType("v4",        32 * GB, 275 * TF, 1.2e12,  50e9,  25e9),
+    "v5p":       DeviceType("v5p",       95 * GB, 459 * TF, 2.76e12, 100e9, 25e9),
+}
+
+# Roofline constants for the production mesh (v5e pod) — system prompt spec.
+TPU_PEAK_FLOPS = 197e12       # bf16 per chip
+TPU_HBM_BW = 819e9            # bytes/s
+TPU_ICI_BW = 50e9             # bytes/s per link

@@ -1,0 +1,110 @@
+"""HAS — Heterogeneity-Aware Scheduler (paper §IV-B, Algorithm 1).
+
+Faithful implementation of Algorithm 1 with two paper typos corrected
+(documented in DESIGN.md): line 15 ``n.gpusize > fitSz`` -> ``>=`` (the
+paper's own Job(4,35)/Node(4,40) example requires it) and line 19
+``N.idleGPUs > reqNum`` -> ``>=`` (best-fit means an exact match is ideal).
+
+Stage 1 — optimal-plan retrieval: walk MARP's ranked plan list, take the
+first plan the cluster can currently satisfy.
+Stage 2 — heterogeneous placement: best-fit bin packing; prefer the single
+node with the fewest idle devices that fits; else greedily consume the
+largest-remainder node and repeat.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.marp import ResourcePlan
+
+
+@dataclass
+class Node:
+    """Node(n, s) of the paper: n idle devices of per-device memory s."""
+    node_id: str
+    device_type: str
+    mem: int                      # bytes per device
+    total: int                    # devices on the node
+    idle: int                     # currently idle devices
+
+
+@dataclass(frozen=True)
+class Allocation:
+    plan: ResourcePlan
+    placements: Tuple[Tuple[str, int], ...]   # (node_id, n_devices)
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.placements)
+
+
+def _eligible(plan: ResourcePlan, n: Node) -> bool:
+    """MARP plans are per-device-type (paper §IV: 'the specific number of
+    GPU cards needed for various types of GPUs'), so a plan is satisfied by
+    its own type; the memory check guards degenerate catalogs."""
+    return n.device_type == plan.device_type and n.mem >= plan.min_mem
+
+
+def select_plan(plans: Sequence[ResourcePlan],
+                nodes: Sequence[Node]) -> Optional[ResourcePlan]:
+    """Stage 1 (Algorithm 1, lines 1-10)."""
+    for plan in plans:
+        avail = sum(n.idle for n in nodes if _eligible(plan, n))
+        if avail >= plan.n_devices:
+            return plan
+    return None
+
+
+def place(plan: ResourcePlan, nodes: Sequence[Node]) -> Optional[Allocation]:
+    """Stage 2 (Algorithm 1, lines 11-37).  Mutates nothing; returns the
+    placement list or None if resources vanished.
+
+    Placement preference (best-fit, smallest-adequate first — Algorithm 1's
+    ``fitSz``):
+      1. the single node with the fewest idle devices that fits everything;
+      2. else the smallest memory class whose total idle covers the job
+         (keeps synchronous data parallelism on homogeneous devices);
+      3. else greedy spill across classes, largest remainder first.
+    """
+    idle: Dict[str, int] = {n.node_id: n.idle for n in nodes}
+    req = plan.n_devices
+    alloc: List[Tuple[str, int]] = []
+    cand = [n for n in nodes if _eligible(plan, n) and idle[n.node_id] > 0]
+    if sum(idle[n.node_id] for n in cand) < req:
+        return None
+    # 1) single-node best fit: smallest adequate memory, then fewest idle
+    single = [n for n in cand if idle[n.node_id] >= req]
+    if single:
+        best = min(single, key=lambda n: (n.mem, idle[n.node_id]))
+        return Allocation(plan=plan, placements=((best.node_id, req),))
+    # 2) smallest homogeneous memory class that covers the job
+    for mem in sorted({n.mem for n in cand}):
+        group = [n for n in cand if n.mem == mem]
+        if sum(idle[n.node_id] for n in group) >= req:
+            group.sort(key=lambda n: -idle[n.node_id])        # densest first
+            for n in group:
+                take = min(idle[n.node_id], req)
+                alloc.append((n.node_id, take))
+                req -= take
+                if req == 0:
+                    return Allocation(plan=plan, placements=tuple(alloc))
+    # 3) greedy spill across classes (largest remainder first)
+    for n in sorted(cand, key=lambda x: (-idle[x.node_id], x.mem)):
+        if req == 0:
+            break
+        take = min(idle[n.node_id], req)
+        alloc.append((n.node_id, take))
+        req -= take
+    if req > 0:
+        return None
+    return Allocation(plan=plan, placements=tuple(alloc))
+
+
+def schedule(plans: Sequence[ResourcePlan],
+             nodes: Sequence[Node]) -> Optional[Allocation]:
+    """Full HAS: plan retrieval + placement."""
+    plan = select_plan(plans, nodes)
+    if plan is None:
+        return None
+    return place(plan, nodes)

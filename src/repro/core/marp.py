@@ -1,0 +1,172 @@
+"""MARP — Memory-Aware Resource Predictor (paper §IV-A, Fig 2).
+
+For a submitted training job, MARP sweeps (data-parallel d, tensor-parallel t)
+combinations, predicts peak per-device memory for each device type, keeps the
+feasible combinations, and emits a **priority-ranked** list of resource plans
+``Plan(n_devices, min_mem, d, t, ...)``.  HAS consumes the ranked list.
+
+Ranking (paper: "plans at the forefront indicate higher training efficiency"):
+we score each plan with a simple throughput/cost model — fewer devices is
+cheaper, lower tensor-parallel degree means less blocking collective traffic,
+and plans that fit in one node avoid cross-node links.  The score is
+estimated-samples/sec divided by devices used (goodput per card).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core import memory_model as mm
+from repro.core.devices import DEVICE_TYPES, DeviceType
+
+
+@dataclass(frozen=True)
+class ResourcePlan:
+    """Job(n, s) of the paper, plus the parallelism that produced it."""
+    n_devices: int
+    min_mem: int                  # bytes each device must have
+    d: int                        # data parallel degree
+    t: int                        # tensor parallel degree
+    device_type: str              # type the memory estimate assumed
+    pred_bytes: float             # predicted peak bytes/device
+    score: float                  # ranking key (higher = better)
+    zero: int = 1
+
+    @property
+    def min_mem_gb(self) -> float:
+        return self.min_mem / (1024 ** 3)
+
+
+MEM_SAFETY = 0.92                 # leave headroom for allocator fragmentation
+
+
+def _tp_efficiency(t: int, dev: DeviceType) -> float:
+    """Tensor parallelism serialises two all-reduces per layer — efficiency
+    falls with t and with slower links."""
+    if t == 1:
+        return 1.0
+    link_scale = dev.link_bw / 600e9  # normalised to NVLink A100
+    return 1.0 / (1.0 + 0.08 * (t - 1) / max(link_scale, 0.1))
+
+
+def _dp_efficiency(d: int) -> float:
+    """Gradient all-reduce + input-pipeline scaling losses."""
+    return 1.0 / (1.0 + 0.06 * math.log2(max(d, 1)) ** 1.5)
+
+
+def plan_throughput_score(cfg: ModelConfig, dev: DeviceType, d: int, t: int,
+                          global_batch: int, seq: int) -> float:
+    """Estimated job samples/s — the paper ranks plans by training
+    efficiency, so the fastest feasible plan sits at the forefront; under
+    contention HAS naturally falls through to the smaller ones."""
+    n_active = _active_analytic(cfg)
+    flops_per_sample = 6.0 * n_active * seq
+    eff = 0.45 * _tp_efficiency(t, dev) * _dp_efficiency(d)   # 45% MFU baseline
+    total = dev.flops * eff * d * t
+    # Contention-aware efficiency ranking: nearly goodput-per-card (beta=0.9)
+    # so the forefront plans are efficient under load, while ties still break
+    # toward more parallelism.  Calibrated in EXPERIMENTS.md §Scheduling.
+    return total / flops_per_sample / ((d * t) ** 0.9)
+
+
+def _active_analytic(cfg: ModelConfig) -> int:
+    total = mm.analytic_param_count(cfg)
+    if not cfg.num_experts:
+        return total
+    nm = 3 if cfg.mlp_variant == "swiglu" else 2
+    n_moe = sum(1 for l in range(cfg.num_layers) if cfg.layer_is_moe(l))
+    per_e = cfg.d_model * cfg.moe_d_ff * nm
+    return total - n_moe * per_e * (cfg.num_experts - cfg.top_k)
+
+
+def predict_plans(cfg: ModelConfig, global_batch: int, seq: int, *,
+                  device_types: Optional[Sequence[str]] = None,
+                  max_devices: int = 512,
+                  zero: int = 1,
+                  mode: str = "exact",
+                  max_t: int = 64) -> List[ResourcePlan]:
+    """Enumerate (d, t) plans, keep feasible ones, rank by score (desc).
+
+    mode='paper' uses the paper's GPT formulas verbatim; mode='exact' uses the
+    generalised per-family model (DESIGN.md §4).
+    """
+    device_types = list(device_types or DEVICE_TYPES)
+    plans: List[ResourcePlan] = []
+    d_candidates = [x for x in _pow2_divisors(global_batch) if x <= max_devices]
+    for dt_name in device_types:
+        dev = DEVICE_TYPES[dt_name]
+        cap = dev.mem * MEM_SAFETY
+        for d in d_candidates:
+            t = 1
+            while t <= max_t and d * t <= max_devices:
+                if mode == "paper":
+                    pred = mm.paper_peak_bytes(cfg, global_batch, seq, d, t)
+                else:
+                    pred = mm.exact_peak_bytes(cfg, global_batch, seq, d, t,
+                                               zero=zero)
+                if pred < cap:
+                    score = plan_throughput_score(cfg, dev, d, t,
+                                                  global_batch, seq)
+                    plans.append(ResourcePlan(
+                        n_devices=d * t, min_mem=int(pred / MEM_SAFETY) + 1,
+                        d=d, t=t, device_type=dt_name, pred_bytes=pred,
+                        score=score, zero=zero))
+                    break          # larger t only wastes devices for this d
+                t *= 2
+    plans.sort(key=lambda p: (-p.score, p.n_devices, p.t))
+    return plans
+
+
+def _pow2_divisors(n: int) -> List[int]:
+    out = [1]
+    while out[-1] * 2 <= n and n % (out[-1] * 2) == 0:
+        out.append(out[-1] * 2)
+    return out
+
+
+def required_devices(cfg: ModelConfig, global_batch: int, seq: int,
+                     device_type: str = "v5e", **kw) -> Optional[ResourcePlan]:
+    """The serverless entry point: 'how many cards of this type do I need?'"""
+    plans = predict_plans(cfg, global_batch, seq,
+                          device_types=[device_type], **kw)
+    return plans[0] if plans else None
+
+
+# --------------------------------------------------------------- serving ---
+# Beyond-paper: the paper covers training only; the same memory-aware plan
+# machinery applies to serving (bf16 weights + KV/SSM cache instead of the
+# 20 B/param optimizer state).
+
+def predict_serve_plans(cfg: ModelConfig, batch: int, cache_len: int, *,
+                        device_types: Optional[Sequence[str]] = None,
+                        max_devices: int = 512,
+                        max_t: int = 64) -> List[ResourcePlan]:
+    """Enumerate (d, t) plans for batched decoding: d shards the request
+    batch, t the weights.  Ranked by decode throughput per plan (decode is
+    HBM-bound: rate ~ aggregate HBM bandwidth / bytes touched per token)."""
+    device_types = list(device_types or DEVICE_TYPES)
+    plans: List[ResourcePlan] = []
+    W = mm.analytic_param_count(cfg)
+    d_candidates = [x for x in _pow2_divisors(batch) if x <= max_devices]
+    for dt_name in device_types:
+        dev = DEVICE_TYPES[dt_name]
+        cap = dev.mem * MEM_SAFETY
+        for d in d_candidates:
+            t = 1
+            while t <= max_t and d * t <= max_devices:
+                pred = mm.serve_peak_bytes(cfg, batch, cache_len, d, t)
+                if pred < cap:
+                    # per-token bytes: weights (2W/t per group) + cache slice
+                    bytes_per_tok = 2.0 * W / t + pred - 2.0 * W / t
+                    rate = dev.hbm_bw * d * t / max(bytes_per_tok, 1.0) \
+                        * _tp_efficiency(t, dev)
+                    plans.append(ResourcePlan(
+                        n_devices=d * t, min_mem=int(pred / MEM_SAFETY) + 1,
+                        d=d, t=t, device_type=dt_name, pred_bytes=pred,
+                        score=rate / ((d * t) ** 0.9)))
+                    break
+                t *= 2
+    plans.sort(key=lambda p: (-p.score, p.n_devices, p.t))
+    return plans

@@ -1,0 +1,222 @@
+"""Analytic GPU/TPU memory models — the heart of MARP (paper §IV-A).
+
+Two models:
+
+* **paper** — the exact formulas from the paper (vanilla GPT, mixed-precision
+  Adam, no remat):  ``W = V·h + l·(12h² + 13h)``, static ``20W/t``,
+  activations ``s·b·h·l·(10 + 24/t + 5·a·s/(h·t))``.
+
+* **exact** — generalised to every assigned architecture family: analytic
+  parameter count mirroring ``repro.models`` exactly (validated in tests
+  against ``jax.eval_shape``), static bytes parameterised by ZeRO level, and
+  an activation model matching our actual implementation (block remat +
+  chunked attention), validated against ``compiled.memory_analysis()`` in
+  EXPERIMENTS.md §Memory.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+from repro.models.moe import moe_capacity
+
+# ------------------------------------------------------------ paper mode ----
+
+def paper_param_count(vocab: int, hidden: int, layers: int) -> int:
+    """W = V·h + l·(12h² + 13h)   (paper §IV-A)."""
+    return vocab * hidden + layers * (12 * hidden ** 2 + 13 * hidden)
+
+
+def paper_static_bytes(W: int, t: int) -> float:
+    """20 bytes/param mixed-precision Adam state, tensor-parallel split."""
+    return 20.0 * W / t
+
+
+def paper_activation_bytes(s: int, b_micro: int, h: int, l: int, a: int,
+                           t: int) -> float:
+    """sbhl(10 + 24/t + 5as/(ht))   (paper §IV-A, Korthikanti et al.)."""
+    return s * b_micro * h * l * (10.0 + 24.0 / t + 5.0 * a * s / (h * t))
+
+
+def paper_peak_bytes(cfg: ModelConfig, global_batch: int, seq: int,
+                     d: int, t: int) -> float:
+    W = paper_param_count(cfg.vocab_size, cfg.d_model, cfg.num_layers)
+    b_micro = global_batch / d
+    return (paper_static_bytes(W, t)
+            + paper_activation_bytes(seq, b_micro, cfg.d_model,
+                                     cfg.num_layers, cfg.num_heads, t))
+
+
+# ------------------------------------------------------------ exact mode ----
+
+def analytic_param_count(cfg: ModelConfig) -> int:
+    """Mirror of repro.models.init_params — validated in tests."""
+    d, V, L = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    total = V * d                                      # embed
+    if not cfg.tie_embeddings:
+        total += d * V                                 # lm_head
+    total += d                                         # final_norm
+    nm = 3 if cfg.mlp_variant == "swiglu" else 2
+    for l in range(L):
+        kind = cfg.layer_kind(l)
+        total += d                                     # norm1
+        if kind == "ssm":
+            di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+            ch = di + 2 * n
+            total += (d * (2 * di + 2 * n + h)         # in_proj
+                      + cfg.ssm_conv * ch + ch         # conv w+b
+                      + 3 * h                          # A_log, D, dt_bias
+                      + di                             # gated norm
+                      + di * d)                        # out_proj
+        elif cfg.attention == "mla":
+            rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+            dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+            H = cfg.num_heads
+            total += (d * rq + rq + rq * H * (dn + dr)
+                      + d * (rkv + dr) + rkv
+                      + rkv * H * dn + rkv * H * dv
+                      + H * dv * d)
+        else:
+            H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+            total += d * H * hd + 2 * d * K * hd + H * hd * d
+        has_ffn = cfg.layer_is_moe(l) or cfg.d_ff > 0
+        if has_ffn:
+            total += d                                 # norm2
+            if cfg.layer_is_moe(l):
+                E, f = cfg.num_experts, cfg.moe_d_ff
+                total += d * E + E * d * f * nm
+                if cfg.num_shared_experts:
+                    total += d * (cfg.num_shared_experts * f) * nm
+            else:
+                total += d * cfg.d_ff * nm
+    return total
+
+
+def static_bytes(cfg: ModelConfig, t: int, d: int, zero: int = 1) -> float:
+    """Model-state bytes per device for our trainer.
+
+    bf16 params (2 B) + bf16 grad accumulator (2 B) + fp32 master + Adam m,v
+    (12 B) = 16 B/param, plus 4 B/param transient fp32 grad during the update
+    = the paper's 20 B/param when unsharded.  `t` divides everything; ZeRO
+    level controls which terms `d` also divides.
+    """
+    W = analytic_param_count(cfg)
+    if zero >= 3:
+        p_params = 2.0 * W / (t * d)
+    else:
+        p_params = 2.0 * W / t
+    if zero >= 1:
+        p_grads = 2.0 * W / (t * d)
+        p_opt = 12.0 * W / (t * d)
+        p_update = 4.0 * W / (t * d)
+    else:
+        p_grads = 2.0 * W / t
+        p_opt = 12.0 * W / t
+        p_update = 4.0 * W / t
+    return p_params + p_grads + p_opt + p_update
+
+
+def _block_working_bytes(cfg: ModelConfig, s: int, mb: int, t: int,
+                         q_chunk: int = 2048) -> float:
+    """Peak transient bytes while (re)computing one layer block."""
+    d = cfg.d_model
+    per_layer = []
+    for j in range(cfg.block_period):
+        kind = cfg.layer_kind(j)
+        if kind == "ssm":
+            di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+            L = min(128, s)
+            nc = max(s // L, 1)
+            b = (mb * s * (2 * di + 2 * n + h) * 2 / t        # in_proj out
+                 + mb * s * (di + 2 * n) * 2 / t              # conv out
+                 + mb * nc * L * L * h * 4 / t                # intra-chunk scores+decay
+                 + mb * nc * h * (di // h) * n * 4 / t        # chunk states
+                 + mb * s * di * 4 / t)                       # y fp32
+        elif cfg.attention == "mla":
+            H = cfg.num_heads
+            dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+            qc = min(q_chunk, s)
+            b = (mb * s * H * (dn + dr) * 2 * 2 / t           # q, k reconstructed
+                 + mb * s * H * dv * 2 / t                    # v
+                 + mb * H * qc * qc * 4 / t                   # one score chunk fp32
+                 + mb * s * (cfg.kv_lora_rank + dr) * 2)      # latent (replicated)
+        else:
+            H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+            qc = min(q_chunk, s)
+            kv_span = min(s, (cfg.sliding_window or s) + qc)
+            b = (mb * s * (H + 2 * K) * hd * 2 / t            # q,k,v
+                 + mb * H * qc * min(qc, kv_span) * 4 / t     # one score chunk
+                 + mb * s * H * hd * 4 / t)                   # acc fp32
+        if cfg.layer_is_moe(j):
+            E, f = cfg.num_experts, cfg.moe_d_ff
+            T = mb * s
+            C = moe_capacity(T, E, cfg.top_k)
+            b += E * C * d * 2 / t + E * C * f * 2 * 2 / t    # xg + expert hidden
+            if cfg.num_shared_experts:
+                b += T * cfg.num_shared_experts * f * 2 * 2 / t
+        elif cfg.d_ff:
+            b += mb * s * cfg.d_ff * 2 * 2 / t                # h (+gate)
+        per_layer.append(b)
+    # backward of one block keeps ~fwd working set + grads of it
+    return 2.0 * max(per_layer)
+
+
+def activation_bytes(cfg: ModelConfig, s: int, mb: int, t: int,
+                     remat: str = "block") -> float:
+    """Activation bytes per device for micro-batch ``mb`` and sequence ``s``."""
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    nb = L // cfg.block_period
+    logits = mb * s * (V / t) * (2 + 4 + 4)            # bf16 logits + fp32 lse/grad
+    x_io = 4 * mb * s * d * 2                          # embeds + residual copies
+    if remat == "block":
+        stored = nb * mb * s * d * 2 * cfg.block_period  # per-sublayer carry inputs
+        return stored + _block_working_bytes(cfg, s, mb, t) + logits + x_io
+    # no remat: everything live (paper-style accounting, generalised)
+    total = 0.0
+    for j in range(cfg.block_period):
+        total += _block_working_bytes(cfg, s, mb, t) / 2.0 + mb * s * d * 2 * 2
+    return total * nb + logits + x_io
+
+
+# Calibrated against compiled.memory_analysis() (EXPERIMENTS.md §Memory):
+# XLA reserves ~0.8 GiB/device of runtime workspace (collective buffers,
+# loop carries, convert scratch) independent of model size.
+XLA_RUNTIME_OVERHEAD = int(0.8 * 1024 ** 3)
+
+
+def exact_peak_bytes(cfg: ModelConfig, global_batch: int, seq: int,
+                     d: int, t: int, *, zero: int = 1, microbatch: int = 0,
+                     remat: str = "block") -> float:
+    """Predicted peak bytes/device for our trainer under plan (d, t)."""
+    shard_batch = max(global_batch // d, 1)
+    mb = microbatch or min(shard_batch, 1)
+    mb = max(min(mb, shard_batch), 1)
+    return (static_bytes(cfg, t, d, zero)
+            + activation_bytes(cfg, seq, mb, t, remat)
+            + XLA_RUNTIME_OVERHEAD)
+
+
+# ----------------------------------------------------------- serve mode -----
+
+def serve_peak_bytes(cfg: ModelConfig, batch: int, cache_len: int,
+                     d: int, t: int, *, zero: int = 0) -> float:
+    """Peak bytes/device for decode: bf16 weights + KV/SSM cache + workspace."""
+    W = analytic_param_count(cfg)
+    wbytes = 2.0 * W / (t * d if zero >= 3 else t)
+    cache = 0.0
+    for l in range(cfg.num_layers):
+        kind = cfg.layer_kind(l)
+        if kind == "ssm":
+            ch = cfg.d_inner + 2 * cfg.ssm_state
+            cache += batch * ((cfg.ssm_conv - 1) * ch * 2
+                              + cfg.n_ssm_heads * cfg.ssm_head_dim
+                              * cfg.ssm_state * 4) / t
+        elif cfg.attention == "mla":
+            cache += batch * cache_len * (cfg.kv_lora_rank
+                                          + cfg.qk_rope_head_dim) * 2 / d
+        else:
+            S = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+            cache += batch * S * 2 * cfg.num_kv_heads * cfg.head_dim * 2 / (d * t)
+    work = batch * cfg.d_model * 64 * 2                # decode workspace (small)
+    return wbytes + cache + work

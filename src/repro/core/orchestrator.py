@@ -1,0 +1,95 @@
+"""Resource Orchestrator (paper §IV): tracks heterogeneous cluster state,
+executes allocation/release, and drives the serverless job lifecycle."""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.devices import DEVICE_TYPES
+from repro.core.has import Allocation, Node, schedule
+from repro.core.marp import ResourcePlan
+
+
+@dataclass
+class JobRecord:
+    job_id: int
+    plans: Sequence[ResourcePlan]
+    allocation: Optional[Allocation] = None
+    state: str = "queued"            # queued | running | done
+
+
+class Orchestrator:
+    """Owns cluster state; allocate/release are the only mutation points."""
+
+    def __init__(self, nodes: Sequence[Node]):
+        self.nodes: Dict[str, Node] = {n.node_id: n for n in nodes}
+        self.jobs: Dict[int, JobRecord] = {}
+        self._ids = itertools.count()
+
+    # ------------------------------------------------------------ state --
+    def idle_devices(self) -> int:
+        return sum(n.idle for n in self.nodes.values())
+
+    def snapshot(self) -> List[Node]:
+        return list(self.nodes.values())
+
+    # ------------------------------------------------------- lifecycle ---
+    def submit(self, plans: Sequence[ResourcePlan]) -> JobRecord:
+        rec = JobRecord(job_id=next(self._ids), plans=plans)
+        self.jobs[rec.job_id] = rec
+        self.try_start(rec)
+        return rec
+
+    def try_start(self, rec: JobRecord) -> bool:
+        if rec.state != "queued":
+            return False
+        alloc = schedule(rec.plans, self.snapshot())
+        if alloc is None:
+            return False
+        for node_id, k in alloc.placements:
+            node = self.nodes[node_id]
+            assert node.idle >= k, (node_id, node.idle, k)
+            node.idle -= k
+        rec.allocation = alloc
+        rec.state = "running"
+        return True
+
+    def release(self, job_id: int) -> None:
+        rec = self.jobs[job_id]
+        if rec.state != "running":
+            return
+        for node_id, k in rec.allocation.placements:
+            self.nodes[node_id].idle += k
+        rec.state = "done"
+        # opportunistically start queued jobs (FIFO by id)
+        for other in sorted(self.jobs.values(), key=lambda r: r.job_id):
+            if other.state == "queued":
+                self.try_start(other)
+
+
+def make_cluster(spec: Sequence[tuple]) -> List[Node]:
+    """spec: [(count, devices_per_node, device_type), ...] -> Node list."""
+    nodes = []
+    i = 0
+    for count, per_node, dt in spec:
+        mem = DEVICE_TYPES[dt].mem
+        for _ in range(count):
+            nodes.append(Node(node_id=f"n{i}-{dt}", device_type=dt,
+                              mem=mem, total=per_node, idle=per_node))
+            i += 1
+    return nodes
+
+
+# The paper's two experimental clusters (§V-A).
+PAPER_REAL_CLUSTER = [
+    (1, 2, "A100-40G"), (1, 1, "A100-40G"), (1, 4, "A800-80G"),
+    (2, 2, "A100-80G"),
+]
+PAPER_SIM_CLUSTER = [
+    (3, 8, "RTX2080Ti"), (2, 8, "A100-40G"), (1, 4, "RTX6000"),
+]
+# TPU adaptation: a heterogeneous TPU fleet (DESIGN.md §3).
+TPU_FLEET = [
+    (4, 8, "v5e"), (2, 4, "v4"), (1, 4, "v5p"),
+]

@@ -1,0 +1,52 @@
+"""The serverless front door (paper §I): users submit a model + training
+config and nothing else; MARP predicts resources, HAS places the job, the
+orchestrator tracks it.  This is what `python -m repro.launch.submit` drives.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.marp import ResourcePlan, predict_plans
+from repro.core.orchestrator import JobRecord, Orchestrator
+
+
+@dataclass
+class SubmitResult:
+    job: JobRecord
+    plans: Sequence[ResourcePlan]
+
+    @property
+    def started(self) -> bool:
+        return self.job.state == "running"
+
+    def describe(self) -> str:
+        lines = [f"job {self.job.job_id}: {self.job.state}"]
+        if self.job.allocation:
+            p = self.job.allocation.plan
+            lines.append(f"  plan: d={p.d} t={p.t} -> {p.n_devices}x"
+                         f" {p.device_type} (>= {p.min_mem_gb:.1f} GB each,"
+                         f" predicted {p.pred_bytes / 2**30:.1f} GB)")
+            for node_id, k in self.job.allocation.placements:
+                lines.append(f"  node {node_id}: {k} device(s)")
+        else:
+            lines.append(f"  queued ({len(self.plans)} feasible plans,"
+                         " awaiting resources)")
+        return "\n".join(lines)
+
+
+def submit(orch: Orchestrator, cfg: ModelConfig, train: TrainConfig, *,
+           mode: str = "exact") -> SubmitResult:
+    """Serverless submission: no device counts or types from the user."""
+    device_types = sorted({n.device_type for n in orch.nodes.values()})
+    plans = predict_plans(cfg, train.global_batch, train.seq_len,
+                          device_types=device_types, zero=train.zero,
+                          mode=mode)
+    if not plans:
+        raise RuntimeError(
+            f"MARP found no feasible (d, t) plan for {cfg.name} at"
+            f" batch={train.global_batch} seq={train.seq_len} on device types"
+            f" {device_types} — the model cannot fit this cluster.")
+    rec = orch.submit(plans)
+    return SubmitResult(job=rec, plans=plans)

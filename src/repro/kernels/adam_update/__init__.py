@@ -1,0 +1,3 @@
+from repro.kernels.adam_update.adam_update import adam_update_fused  # noqa: F401
+from repro.kernels.adam_update.ops import adam_update_op  # noqa: F401
+from repro.kernels.adam_update.ref import adam_ref  # noqa: F401

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the fused Adam kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.adam_update.adam_update import adam_update_fused
+
+
+@partial(jax.jit, static_argnames=("beta1", "beta2", "eps", "wd", "block",
+                                   "interpret"))
+def adam_update_op(g, m, v, master, lr, c1, c2, *, beta1=0.9, beta2=0.95,
+                   eps=1e-8, wd=0.1, block=64 * 1024, interpret=None):
+    return adam_update_fused(g, m, v, master, lr=lr, beta1=beta1, beta2=beta2,
+                             eps=eps, wd=wd, c1=c1, c2=c2, block=block,
+                             interpret=interpret)

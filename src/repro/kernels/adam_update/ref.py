@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused mixed-precision Adam update."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adam_ref(g, m, v, master, *, lr, beta1, beta2, eps, wd, c1, c2):
+    """All fp32 except the returned bf16 params.  c1/c2 are the bias
+    corrections 1-beta^t."""
+    g = g.astype(jnp.float32)
+    m2 = beta1 * m + (1 - beta1) * g
+    v2 = beta2 * v + (1 - beta2) * jnp.square(g)
+    update = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps) + wd * master
+    master2 = master - lr * update
+    return m2, v2, master2, master2.astype(jnp.bfloat16)

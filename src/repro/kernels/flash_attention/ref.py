@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel (causal + sliding window,
+GQA).  Materialises the full score matrix — small shapes only."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  softmax_scale: float | None = None) -> jax.Array:
+    """q: (b, sq, H, D); k, v: (b, sk, K, D); H = K*G.  fp32 softmax."""
+    b, sq, H, D = q.shape
+    _, sk, K, _ = k.shape
+    G = H // K
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qr = q.reshape(b, sq, K, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kp <= qp
+    if window:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, H, D).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan  # noqa: F401
+from repro.kernels.ssd_scan.ops import ssd_scan_op  # noqa: F401
+from repro.kernels.ssd_scan.ref import ssd_ref  # noqa: F401

@@ -1,0 +1,15 @@
+"""Jit'd public wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_op(x, dt, A_log, B, C, D, dt_bias, *, chunk: int = 128,
+                interpret: bool | None = None):
+    return ssd_scan(x, dt, A_log, B, C, D, dt_bias, chunk=chunk,
+                    interpret=interpret)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SSD scan kernel: the naive sequential recurrence
+(exactly the Mamba2 SSM semantics, no chunking)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array, D: jax.Array, init_state: jax.Array | None = None):
+    """x: (b, s, h, p); dt: (b, s, h) post-softplus; A: (h,) negative;
+    B, C: (b, s, n); D: (h,).  Returns (y (b,s,h,p), final state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp                  # (b,h,p),(b,h),(b,n),(b,n)
+        dA = jnp.exp(dt_t * A)                     # (b,h)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt_t, B_t.astype(jnp.float32),
+                         x_t)
+        state = state * dA[:, :, None, None] + upd
+        y_t = jnp.einsum("bn,bhpn->bhp", C_t.astype(jnp.float32), state)
+        return state, y_t
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    final, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + D[None, None, :, None] * xf
+    return y.astype(x.dtype), final

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan [arXiv:2405.21060].
+
+TPU adaptation of the SSD algorithm: the grid walks (batch, head, chunk) with
+the chunk axis minor-most/sequential; the inter-chunk recurrent state (P x N)
+lives in VMEM scratch and is carried across grid steps — this replaces the
+GPU implementation's cross-block shared-memory/atomics state passing, which
+has no TPU analogue (DESIGN.md §3).  Within a chunk the three SSD terms
+(diagonal block, state output, state update) are dense matmuls on the MXU
+with 128-aligned chunk length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, dtb_ref,
+            y_ref, st_ref, state_scr, *, L: int, seq: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (L, P)
+    dt_raw = dt_ref[0, :, 0].astype(jnp.float32)       # (L,)
+    B = B_ref[0, :, :].astype(jnp.float32)             # (L, N)
+    C = C_ref[0, :, :].astype(jnp.float32)             # (L, N)
+    A = -jnp.exp(A_ref[0].astype(jnp.float32))         # scalar
+    Dv = D_ref[0].astype(jnp.float32)
+    dtb = dtb_ref[0].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw + dtb)                 # (L,)
+    # mask padding rows (last chunk when seq % L != 0)
+    pos = ic * L + jax.lax.broadcasted_iota(jnp.int32, (L, 1), 0)[:, 0]
+    dt = jnp.where(pos < seq, dt, 0.0)
+    dA = dt * A                                        # (L,)
+    cum = jnp.cumsum(dA)                               # (L,)
+
+    # 1) diagonal block: y[i] = sum_{j<=i} C_i.B_j exp(cum_i - cum_j) dt_j x_j
+    seg = cum[:, None] - cum[None, :]                  # (L, L)
+    tril = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(tril, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    w = scores * decay * dt[None, :]                   # (L, L)
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # 2) contribution of the carried state: y[i] += exp(cum_i) C_i . state
+    state = state_scr[...]                             # (P, N)
+    y_off = jax.lax.dot_general(C, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + y_off * jnp.exp(cum)[:, None]
+
+    # 3) state update: state' = exp(cum_L) state + sum_j dt_j exp(cum_L-cum_j) x_j B_j^T
+    wstate = dt * jnp.exp(cum[-1] - cum)               # (L,)
+    upd = jax.lax.dot_general(x * wstate[:, None], B,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_scr[...] = state * jnp.exp(cum[-1]) + upd
+
+    y_ref[0, :, 0, :] = (y + Dv * x).astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        st_ref[0, 0, :, :] = state_scr[...]
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A_log: jax.Array, B: jax.Array,
+             C: jax.Array, D: jax.Array, dt_bias: jax.Array, *,
+             chunk: int = 128, interpret: bool | None = None):
+    """x: (b, s, h, p); dt (pre-softplus): (b, s, h); A_log, D, dt_bias: (h,);
+    B, C: (b, s, n).  Returns (y (b,s,h,p) in x.dtype, state (b,h,p,n) f32)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    L = min(chunk, s)
+    s_p = -(-s // L) * L
+    if s_p != s:
+        pad = ((0, 0), (0, s_p - s), (0, 0), (0, 0))
+        x = jnp.pad(x, pad)
+        dt = jnp.pad(dt, pad[:3])
+        B = jnp.pad(B, ((0, 0), (0, s_p - s), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, s_p - s), (0, 0)))
+    grid = (b, h, s_p // L)
+
+    y, st = pl.pallas_call(
+        functools.partial(_kernel, L=L, seq=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, L, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, L, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, L, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s_p, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A_log, B, C, D, dt_bias)
+    return y[:, :s], st

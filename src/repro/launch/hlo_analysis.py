@@ -1,0 +1,271 @@
+"""Post-optimization HLO text analyzer for the roofline terms.
+
+``compiled.cost_analysis()`` visits each while body ONCE (no trip-count
+multiplication), which under-counts scanned-layer / microbatch loops by
+10-70x — so we parse ``compiled.as_text()`` ourselves:
+
+* **flops** — every ``dot`` op: 2 x |output| x |contracted dims|, multiplied
+  by the product of enclosing while-loop trip counts (``known_trip_count``
+  from backend_config, falling back to the constant in the loop condition).
+* **hbm_bytes** — operand + output bytes of top-level (non-fused-internal)
+  instructions: post-fusion, each such buffer is an HBM-materialised value,
+  a standard traffic approximation.
+* **collective_bytes** — operand bytes of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute (async ``-start`` forms
+  counted once), by opcode, trip-multiplied.  Shapes in post-partitioning
+  HLO are PER-DEVICE, so the totals are per-device traffic.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes in a shape string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Instr:
+    name: str
+    shape_str: str            # output shape (maybe tuple)
+    opcode: str
+    rest: str                 # text after the operand list
+    operands: List[str]
+    inner: str = ""           # text inside the operand parens
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+_OPCODE_RE = re.compile(
+    r"^((?:\([^)]*\)|[\w\[\],{}]+)+)\s+([\w\-]+)(?:\(|\.)")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        # computation headers: "%name (params...) -> type {" — params may
+        # contain nested parens (tuple-typed while-body params)
+        header = None
+        if (not line.startswith(" ") and line.rstrip().endswith("{")
+                and "->" in line):
+            header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+        if header:
+            cur = Computation(name=header.group(1))
+            comps[cur.name] = cur
+            continue
+        if stripped == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # rhs like: "f32[2,3]{1,0} dot(%a, %b), meta..."  or tuple shapes
+        om = re.match(r"^((?:\([^()]*\)|\S)+)\s+([\w\-]+)\((.*)$", rhs)
+        if not om:
+            continue
+        shape_str, opcode, rest = om.group(1), om.group(2), om.group(3)
+        # operands: the %refs inside the first balanced paren group
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        opnds = _OPND_RE.findall(rest[:end])
+        tail = rest[end:]
+        instr = Instr(name=name, shape_str=shape_str, opcode=opcode,
+                      rest=tail, operands=opnds, inner=rest[:end])
+        cur.instrs.append(instr)
+        cur.shapes[name] = shape_str
+    return comps
+
+
+def _trip_count(instr: Instr, comps: Dict[str, Computation]) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', instr.rest)
+    if m:
+        return int(m.group(1))
+    # fallback: constant in the condition computation
+    cm = re.search(r"condition=%([\w.\-]+)", instr.rest)
+    if cm and cm.group(1) in comps:
+        for ci in comps[cm.group(1)].instrs:
+            if ci.opcode == "constant" and re.fullmatch(r"\d+", ci.inner):
+                return int(ci.inner)
+    return 1
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def to_json(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collective_bytes": dict(self.collective_bytes),
+                "collective_counts": dict(self.collective_counts),
+                "total_collective_bytes": self.total_collective_bytes}
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "while", "conditional", "after-all", "iota",
+                   "copy-start", "copy-done",
+                   # layout/precision ops: real traffic on XLA:CPU but fused
+                   # into neighbours on the TPU target this roofline models
+                   "copy", "transpose", "convert", "broadcast", "reshape",
+                   "slice", "pad", "reverse"}
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    out_elems = _shape_elems(instr.shape_str)
+    lhs = instr.operands[0] if instr.operands else None
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    if lhs is None or lhs not in comp.shapes or not cdims:
+        return 0.0
+    lhs_shape = _SHAPE_RE.search(comp.shapes[lhs])
+    if not lhs_shape:
+        return 0.0
+    dims = [int(x) for x in lhs_shape.group(2).split(",") if x]
+    k = 1
+    for ci in cdims.group(1).split(","):
+        if ci:
+            k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(instr: Instr, comp: Computation) -> float:
+    # 2 * |out| * (kernel spatial * in_features)
+    out_elems = _shape_elems(instr.shape_str)
+    if len(instr.operands) < 2 or instr.operands[1] not in comp.shapes:
+        return 0.0
+    ksh = _SHAPE_RE.search(comp.shapes[instr.operands[1]])
+    if not ksh:
+        return 0.0
+    kdims = [int(x) for x in ksh.group(2).split(",") if x]
+    n = 1
+    for d in kdims[:-1]:
+        n *= d
+    return 2.0 * out_elems * n
+
+
+def analyze(text: str) -> HloStats:
+    comps = parse_hlo(text)
+    entry = None
+    for name in comps:
+        if name.endswith("main") or name == "main" or "main." in name:
+            entry = name
+    if entry is None:                       # fall back: last computation
+        entry = list(comps)[-1]
+
+    stats = HloStats()
+    seen_stack: List[str] = []
+
+    def visit(comp_name: str, mult: float, top_level: bool):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen_stack:
+            return
+        seen_stack.append(comp_name)
+        for instr in comp.instrs:
+            op = instr.opcode
+            if op == "while":
+                trips = _trip_count(instr, comps)
+                bm = re.search(r"body=%([\w.\-]+)", instr.rest)
+                if bm:
+                    visit(bm.group(1), mult * trips, True)
+                continue
+            if op == "fusion":
+                fm = re.search(r"calls=%([\w.\-]+)", instr.rest)
+                if fm:
+                    visit(fm.group(1), mult, False)   # flops only inside
+            if op == "call":
+                cm2 = re.search(r"to_apply=%([\w.\-]+)", instr.rest)
+                if cm2:
+                    visit(cm2.group(1), mult, True)
+            if op == "conditional":
+                for br in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                     r"(?:true|false)_computation=%([\w.\-]+))",
+                                     instr.rest):
+                    for g in br:
+                        for nm in _OPND_RE.findall(g or ""):
+                            visit(nm, mult, True)
+                continue
+            # ---- flops ----
+            base = op.replace("-start", "")
+            if op == "dot":
+                stats.flops += mult * _dot_flops(instr, comp)
+            elif op == "convolution":
+                stats.flops += mult * _conv_flops(instr, comp)
+            # ---- collectives ----
+            if base in COLLECTIVES and not op.endswith("-done"):
+                opnd_bytes = sum(_shape_bytes(comp.shapes.get(o, ""))
+                                 for o in instr.operands)
+                if base == "all-gather":  # operands are the shards; traffic ~ output
+                    opnd_bytes = max(opnd_bytes, _shape_bytes(instr.shape_str))
+                stats.collective_bytes[base] = (
+                    stats.collective_bytes.get(base, 0.0) + mult * opnd_bytes)
+                stats.collective_counts[base] = (
+                    stats.collective_counts.get(base, 0) + 1)
+            # ---- hbm traffic ----
+            if top_level and op not in _SKIP_BYTES_OPS:
+                b = _shape_bytes(instr.shape_str)
+                for o in instr.operands:
+                    b += _shape_bytes(comp.shapes.get(o, ""))
+                stats.hbm_bytes += mult * b
+        seen_stack.pop()
+
+    visit(entry, 1.0, True)
+    return stats

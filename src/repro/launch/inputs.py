@@ -1,0 +1,112 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x input-shape)
+combination — the dry-run lowers against these (no allocation ever)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import init_params, init_cache
+from repro.parallel import sharding as sh
+from repro.train import make_train_state, state_specs
+
+
+def default_train_config(cfg: ModelConfig, shape: ShapeConfig) -> TrainConfig:
+    """Serverless default: MARP-style auto choice of ZeRO level + microbatch."""
+    from repro.core.memory_model import analytic_param_count
+    big = analytic_param_count(cfg) > 20e9
+    return TrainConfig(global_batch=shape.global_batch, seq_len=shape.seq_len,
+                       microbatch=1, zero=3 if big else 1)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Input batch ShapeDtypeStructs for train/prefill shapes."""
+    B, s = shape.global_batch, shape.seq_len
+    text = s - cfg.num_modal_tokens
+    assert text > 0, (cfg.name, shape.name)
+    batch = {"tokens": _sds((B, text), jnp.int32)}
+    if cfg.num_modal_tokens:
+        batch["modal_embeds"] = _sds((B, cfg.num_modal_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+    if shape.kind == "train":
+        batch["labels"] = _sds((B, s), jnp.int32)
+    return batch
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 tc: TrainConfig):
+    """(state_sds, batch_sds), (state_shardings, batch_shardings)."""
+    key_sds = _sds((2,), jnp.uint32)
+    state_sds = jax.eval_shape(partial(make_train_state, cfg, tc), key_sds)
+    sspec = state_specs(cfg, tc, mesh, state_sds)
+    bspec = sh.batch_specs(cfg, shape, mesh)
+    s_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspec,
+                        is_leaf=lambda x: isinstance(x, P))
+    b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspec,
+                        is_leaf=lambda x: isinstance(x, P))
+    return (state_sds, batch_struct(cfg, shape)), (s_sh, b_sh)
+
+
+def params_inputs(cfg: ModelConfig, mesh: Mesh, *, zero_data: bool = False):
+    key_sds = _sds((2,), jnp.uint32)
+    p_sds = jax.eval_shape(partial(init_params, cfg), key_sds)
+    p_spec = sh.param_specs(cfg, p_sds, mesh, zero_data=zero_data)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec,
+                        is_leaf=lambda x: isinstance(x, P))
+    return p_sds, p_sh
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """(params, tokens, cache, pos) structs + shardings for serve_step.
+
+    2-D weight sharding (beyond-paper): when bf16 weights exceed ~60% of a
+    16 GiB chip at model-axis-only sharding, serving params also shard over
+    the data axes (per-step gathers traded for fitting at all — the choice
+    MARP's serve planner would make)."""
+    from repro.core.memory_model import analytic_param_count
+    B = shape.global_batch
+    tp = mesh.shape.get("model", 1)
+    w_bytes = 2.0 * analytic_param_count(cfg) / tp
+    zero_data = w_bytes > 0.6 * 16 * 1024 ** 3
+    p_sds, p_sh = params_inputs(cfg, mesh, zero_data=zero_data)
+    cache_sds = jax.eval_shape(
+        partial(init_cache, cfg, B, shape.cache_len))
+    c_spec = sh.cache_specs(cfg, shape, mesh)
+    # expand per-sub specs to every leaf in that sub-cache
+    def sub_sharding(subspec, subtree):
+        return jax.tree.map(
+            lambda leaf, sp=None: None, subtree)
+    c_sh = {}
+    for jname, subtree in cache_sds.items():
+        spec = c_spec[jname]
+        c_sh[jname] = {
+            k: NamedSharding(mesh, sh.enforce_divisibility(
+                spec[k], tuple(subtree[k].shape), mesh))
+            for k in subtree}
+    daxes = sh.data_axes(mesh)
+    nd = 1
+    for a in daxes:
+        nd *= mesh.shape[a]
+    dax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    tok_spec = P(dax, None) if B % max(nd, 1) == 0 else P(None, None)
+    tok_sds = _sds((B, 1), jnp.int32)
+    pos_sds = _sds((), jnp.int32)
+    shardings = (p_sh, NamedSharding(mesh, tok_spec), c_sh,
+                 NamedSharding(mesh, P()))
+    return (p_sds, tok_sds, cache_sds, pos_sds), shardings
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    p_sds, p_sh = params_inputs(cfg, mesh)
+    bspec = sh.batch_specs(cfg, shape, mesh)
+    b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspec,
+                        is_leaf=lambda x: isinstance(x, P))
+    return (p_sds, batch_struct(cfg, shape)), (p_sh, b_sh)

@@ -1,0 +1,22 @@
+"""Production mesh construction (deliverable e).
+
+A v5e pod is 16x16 = 256 chips; the multi-pod configuration is 2 pods = 512
+chips with a leading 'pod' axis (data parallelism over DCN).  Defined as a
+FUNCTION so importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_plan_mesh(d: int, t: int):
+    """Mesh for a MARP plan (d data x t model shards) on real local devices."""
+    return jax.make_mesh((d, t), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

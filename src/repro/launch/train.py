@@ -1,0 +1,87 @@
+"""End-to-end training driver (runs on the local devices; the serverless
+path sizes the mesh via MARP).
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --smoke \
+        --steps 20 --batch 8 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_arch, smoke_config
+from repro.data import SyntheticTokens
+from repro.launch.mesh import make_plan_mesh
+from repro.parallel import sharding as sh
+from repro.train import build_train_step, make_train_state, state_specs
+from repro import ckpt as ckpt_mod
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config of the same family")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--zero", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
+    tc = TrainConfig(global_batch=args.batch, seq_len=args.seq,
+                     microbatch=args.microbatch, learning_rate=args.lr,
+                     steps=args.steps, warmup_steps=max(args.steps // 10, 1),
+                     zero=args.zero)
+
+    # serverless mesh sizing: all local devices, data-parallel by default
+    n_dev = jax.device_count()
+    d = min(n_dev, args.batch)
+    t = n_dev // d
+    mesh = make_plan_mesh(d, max(t, 1))
+    print(f"arch={cfg.name} params on mesh d={d} t={t} "
+          f"(devices={n_dev})", flush=True)
+
+    state = make_train_state(cfg, tc, jax.random.PRNGKey(tc.seed))
+    sspec = state_specs(cfg, tc, mesh, state)
+    s_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspec,
+                        is_leaf=lambda x: isinstance(x, P))
+    state = jax.device_put(state, s_sh)
+    step_fn, n_micro = build_train_step(cfg, tc, mesh, args.batch, args.seq)
+    step_jit = jax.jit(step_fn, donate_argnums=(0,))
+
+    data = SyntheticTokens(cfg, args.batch, args.seq, seed=tc.seed)
+    it = iter(data)
+    losses = []
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()
+                 if k in ("tokens", "labels", "modal_embeds")}
+        state, metrics = step_jit(state, batch)
+        losses.append(float(metrics["loss"]))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {i:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({dt:.1f}s)", flush=True)
+    if args.ckpt_dir:
+        ckpt_mod.save(args.ckpt_dir, args.steps, state["params"])
+        print(f"checkpoint saved to {args.ckpt_dir}")
+    print(f"first-10-mean {np.mean(losses[:10]):.4f} "
+          f"last-10-mean {np.mean(losses[-10:]):.4f}")
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), "loss did not fall"
+    return losses
+
+
+if __name__ == "__main__":
+    main()

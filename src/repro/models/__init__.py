@@ -1,0 +1,4 @@
+from repro.models.transformer import (  # noqa: F401
+    init_params, forward, decode_step, init_cache, cache_from_prefill,
+    cross_entropy, param_count, active_param_count,
+)

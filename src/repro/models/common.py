@@ -1,0 +1,46 @@
+"""Shared numeric building blocks (norms, init, activation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with fp32 internals, output in x.dtype."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def gated_rms_norm(x: jax.Array, z: jax.Array, scale: jax.Array,
+                   eps: float = 1e-5) -> jax.Array:
+    """Mamba2 gated norm: RMSNorm(x * silu(z))."""
+    return rms_norm(x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    scale, eps)
+
+
+def dense_init(key, shape, in_axis=0, scale=1.0, dtype=jnp.bfloat16):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis] if in_axis is not None else 1
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def softplus(x):
+    return jax.nn.softplus(x)
+
+
+def act(name: str, x: jax.Array) -> jax.Array:
+    if name == "swiglu":  # caller handles the gate; this is the inner nonlinearity
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)

@@ -1,0 +1,188 @@
+"""Mamba2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm in pure jnp (the model path; the Pallas kernel in
+``repro.kernels.ssd_scan`` is the TPU fast path validated against the same
+math).  Layout follows the Mamba2 reference: in_proj emits [z | xBC | dt],
+a depthwise causal conv over xBC, SSD with scalar-per-head A, gated RMSNorm,
+out_proj.  Single B/C group (n_groups = 1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, gated_rms_norm
+from repro.parallel.act import constrain
+
+
+def init_mamba2(cfg: ModelConfig, key) -> dict:
+    """Projections are split by role — [z|x] (tensor-parallel over d_inner),
+    [B|C] (replicated: n_groups=1 state dims are shared), dt (head-sharded) —
+    so the sharding layer can partition each correctly."""
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 7)
+    dt = jnp.exp(jax.random.uniform(ks[4], (h,), jnp.float32)
+                 * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    return {
+        "in_zx": dense_init(ks[0], (d, 2 * di)),
+        "in_bc": dense_init(ks[1], (d, 2 * n)),
+        "in_dt": dense_init(ks[2], (d, h)),
+        "conv_x_w": dense_init(ks[3], (cfg.ssm_conv, di), in_axis=0),
+        "conv_x_b": jnp.zeros((di,), jnp.bfloat16),
+        "conv_bc_w": dense_init(ks[5], (cfg.ssm_conv, 2 * n), in_axis=0),
+        "conv_bc_b": jnp.zeros((2 * n,), jnp.bfloat16),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # inv softplus
+        "norm": jnp.ones((di,), jnp.bfloat16),
+        "out_proj": dense_init(ks[6], (di, d),
+                               scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _project(cfg: ModelConfig, p: dict, x: jax.Array):
+    """x: (b, s, d) -> z (b,s,di), xBC (b,s,di+2n) pre-conv, dt_raw (b,s,h)."""
+    di = cfg.d_inner
+    # no constraint on zx itself: forcing the fused (b,s,2di) output to a
+    # replicated layout made GSPMD replicate the whole matmul (46% of
+    # jamba's compiled FLOPs, EXPERIMENTS.md §Perf pair 3b); the slice at
+    # di is shard-aligned, so constrain the halves instead
+    zx = x @ p["in_zx"]
+    z = constrain(zx[..., :di], "batch", None, "inner")
+    xs = constrain(zx[..., di:], "batch", None, "inner")
+    bc = x @ p["in_bc"]
+    dt_raw = x @ p["in_dt"]
+    return z, jnp.concatenate([xs, bc], axis=-1), dt_raw
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  xBC: (batch, s, ch); w: (width, ch)."""
+    width = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(width))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xBC.dtype)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, D: jax.Array, *, chunk: int = 128,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (b, s, h, p); dt: (b, s, h) (already softplus'ed); A: (h,) (negative);
+    B, C: (b, s, n); D: (h,).  Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    L = min(chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+
+    dA = (dt * A).reshape(b, nc, L, h)                       # log-decay per step
+    xc = x.reshape(b, nc, L, h, p)
+    dtc = dt.reshape(b, nc, L, h)
+    Bc = B.reshape(b, nc, L, n)
+    Cc = C.reshape(b, nc, L, n)
+
+    cum = jnp.cumsum(dA, axis=2)                             # (b,nc,L,h)
+    # intra-chunk (diagonal blocks): decay(i,j) = exp(cum_i - cum_j), i >= j.
+    # Mask BEFORE exp: above-diagonal seg is large-positive, and
+    # where(mask, exp(seg), 0) would propagate inf*0 = NaN gradients.
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (b,nc,L_i,L_j,h)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, -1e9)
+    decay = jnp.exp(seg)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)[..., None] * decay  # (b,nc,i,j,h)
+    y_diag = jnp.einsum("bcijh,bcjh,bcjhp->bcihp",
+                        scores.astype(jnp.float32),
+                        dtc.astype(jnp.float32),
+                        xc.astype(jnp.float32))
+
+    # per-chunk input states
+    last = cum[:, :, -1:, :]                                 # (b,nc,1,h)
+    decay_to_end = jnp.exp(last - cum)                       # (b,nc,L,h)
+    chunk_states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                              (dtc * decay_to_end).astype(jnp.float32),
+                              Bc.astype(jnp.float32),
+                              xc.astype(jnp.float32))        # (b,nc,h,p,n)
+
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        cs, cum_c, C_c = inp                                 # (b,h,p,n),(b,L,h),(b,L,n)
+        y_off = jnp.einsum("bin,bhpn,bih->bihp", C_c.astype(jnp.float32),
+                           carry, jnp.exp(cum_c))
+        new = carry * jnp.exp(cum_c[:, -1, :])[:, :, None, None] + cs
+        return new, y_off
+
+    xs = (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(cum, 1, 0),
+          jnp.moveaxis(Cc, 1, 0))
+    final_state, y_off = jax.lax.scan(step, state0, xs)
+    y_off = jnp.moveaxis(y_off, 0, 1).reshape(b, nc, L, h, p)
+
+    y = y_diag + y_off + (D[None, None, :, None] *
+                          x.reshape(b, s, h, p).astype(jnp.float32)
+                          ).reshape(b, nc, L, h, p)
+    return y.reshape(b, s, h, p).astype(x.dtype), final_state
+
+
+def mamba2_forward(cfg: ModelConfig, p: dict, x: jax.Array
+                   ) -> Tuple[jax.Array, dict]:
+    """Full-sequence forward.  x: (b, s, d).  Returns (out, final ssm cache)."""
+    b, s, d = x.shape
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    w = cfg.ssm_conv
+    z, xBC, dt_raw = _project(cfg, p, x)
+    # decode conv state = last (w-1) *pre-conv* xBC rows
+    if s >= w - 1:
+        conv_state = xBC[:, s - (w - 1):, :]
+    else:
+        conv_state = jnp.pad(xBC, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    conv_w = jnp.concatenate([p["conv_x_w"], p["conv_bc_w"]], axis=1)
+    conv_b = jnp.concatenate([p["conv_x_b"], p["conv_bc_b"]], axis=0)
+    xBC = _causal_conv(xBC, conv_w, conv_b)
+    xs = xBC[..., :di].reshape(b, s, h, hp)
+    B = xBC[..., di:di + n]
+    C = xBC[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xs = constrain(xs, "batch", None, "heads_inner", None)
+    y, state = ssd_chunked(xs, dt, A, B, C, p["D"])
+    y = constrain(y.reshape(b, s, di), "batch", None, "inner")
+    y = gated_rms_norm(y, z, p["norm"], cfg.norm_eps)
+    out = constrain(y @ p["out_proj"], "batch", None, None)
+    return out, {"conv": conv_state, "ssd": state.astype(jnp.float32)}
+
+
+def mamba2_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict
+                  ) -> Tuple[jax.Array, dict]:
+    """Single-token step.  x: (b, 1, d); cache: conv (b, w-1, ch), ssd (b,h,p,n)."""
+    b, _, d = x.shape
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    z, xBC_new, dt_raw = _project(cfg, p, x)           # (b,1,*)
+    window = jnp.concatenate([cache["conv"], xBC_new], axis=1)  # (b, w, ch)
+    conv_w = jnp.concatenate([p["conv_x_w"], p["conv_bc_w"]], axis=1)
+    conv_b = jnp.concatenate([p["conv_x_b"], p["conv_bc_b"]], axis=0)
+    conv_out = jnp.sum(window * conv_w[None], axis=1, keepdims=True)
+    xBC = jax.nn.silu((conv_out + conv_b).astype(jnp.float32)
+                      ).astype(x.dtype)
+    xs = xBC[..., :di].reshape(b, h, hp)
+    B = xBC[:, 0, di:di + n]                           # (b, n)
+    C = xBC[:, 0, di + n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,h)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                               # (b,h)
+    state = cache["ssd"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, B.astype(jnp.float32), xs.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), state) \
+        + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = gated_rms_norm(y, z, p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_conv = window[:, 1:, :]
+    return out, {"conv": new_conv, "ssd": state}

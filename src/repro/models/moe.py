@@ -1,0 +1,132 @@
+"""Mixture-of-Experts FFN with row-local, sort-based capacity dispatch.
+
+Routing/sort/pack happen independently **per sequence row** (the batch dim),
+so with batch data-sharded the entire dispatch is shard-local — GSPMD emits
+no all-gathers for the index plumbing (a global sort forced it to gather the
+full token buffer; EXPERIMENTS.md §Perf pair 2).  Expert weights carry a
+leading E axis: expert-parallel over 'model' when E divides it, else
+ffn-sharded with the capacity dim sharded over 'data' so the psum moves
+1/|data| of the bytes.  Compiled FLOPs are the *active* FLOPs
+(O(top_k x tokens x d x ff)) — no dense all-expert compute.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, act
+from repro.parallel.act import constrain
+
+CAPACITY_FACTOR = 1.25
+
+
+def moe_capacity(tokens: int, num_experts: int, top_k: int,
+                 capacity_factor: float = CAPACITY_FACTOR) -> int:
+    c = int(math.ceil(tokens * top_k * capacity_factor / num_experts))
+    return max(8, -(-c // 8) * 8)                      # multiple of 8
+
+
+def init_moe(cfg: ModelConfig, key) -> dict:
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype=jnp.float32),
+        "w1": dense_init(ks[1], (E, d, f), in_axis=1),
+        "w2": dense_init(ks[2], (E, f, d), in_axis=1,
+                         scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+    }
+    if cfg.mlp_variant == "swiglu":
+        p["w3"] = dense_init(ks[3], (E, d, f), in_axis=1)
+    if cfg.num_shared_experts:
+        fs = cfg.num_shared_experts * f
+        p["shared_w1"] = dense_init(ks[4], (d, fs))
+        p["shared_w2"] = dense_init(ks[5], (fs, d),
+                                    scale=1.0 / math.sqrt(2 * cfg.num_layers))
+        if cfg.mlp_variant == "swiglu":
+            p["shared_w3"] = dense_init(ks[6], (d, fs))
+    return p
+
+
+def _expert_ffn(cfg: ModelConfig, p: dict, xg: jax.Array) -> jax.Array:
+    """xg: (b, E, C, d) -> (b, E, C, d).  2-D sharded: batch over 'data',
+    experts over 'model' when divisible (else ffn dim)."""
+    xg = constrain(xg, "batch", "experts", None, None)
+    h = jnp.einsum("becd,edf->becf", xg, p["w1"])
+    if cfg.mlp_variant == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", xg, p["w3"])
+    else:
+        h = act(cfg.mlp_variant, h)
+    h = constrain(h, "batch", "experts", None, "expert_ffn")
+    return constrain(jnp.einsum("becf,efd->becd", h, p["w2"]),
+                     "batch", "experts", None, None)
+
+
+def _shared_ffn(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    h = x @ p["shared_w1"]
+    if cfg.mlp_variant == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["shared_w3"])
+    else:
+        h = act(cfg.mlp_variant, h)
+    return h @ p["shared_w2"]
+
+
+def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (b, s, d).  Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    C = moe_capacity(s, E, k)
+
+    # unshard seq once up front: all dispatch indexing is then local to the
+    # batch shard (the residual stream may arrive sequence-sharded)
+    x = constrain(x, "batch", None, None)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)                   # (b, s, k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+
+    # ---- load-balance aux loss (Switch-style) ----
+    me = jnp.mean(probs, axis=(0, 1))                  # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- row-local sort-based dispatch ----
+    sk = s * k
+    flat_e = idx.reshape(b, sk)                        # (b, s*k)
+    token_id = (jnp.arange(sk, dtype=jnp.int32) // k)[None, :]
+    order = jnp.argsort(flat_e, axis=1)                # stable per row
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    sorted_tok = jnp.take_along_axis(
+        jnp.broadcast_to(token_id, (b, sk)), order, axis=1)
+    sorted_w = jnp.take_along_axis(w.reshape(b, sk), order, axis=1)
+    counts = jnp.zeros((b, E), jnp.int32).at[
+        jnp.arange(b)[:, None], flat_e].add(1)
+    starts = jnp.cumsum(counts, axis=1) - counts       # (b, E)
+    pos_in_e = jnp.arange(sk)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=1)
+    keep = pos_in_e < C
+    dest = jnp.where(keep, sorted_e * C + pos_in_e, E * C)
+
+    rows = jnp.arange(b)[:, None]
+    slot_tok = jnp.full((b, E * C + 1), s, jnp.int32).at[
+        rows, dest].set(sorted_tok)[:, :-1]
+    slot_w = jnp.zeros((b, E * C + 1), jnp.float32).at[
+        rows, dest].set(sorted_w)[:, :-1]
+
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    xg = jnp.take_along_axis(x_pad, slot_tok[..., None], axis=1)
+    xg = xg.reshape(b, E, C, d)
+    yg = _expert_ffn(cfg, p, xg).reshape(b, E * C, d)
+    yg = yg * slot_w[..., None].astype(yg.dtype)
+
+    out = jnp.zeros((b, s + 1, d), x.dtype).at[
+        rows, slot_tok].add(yg.astype(x.dtype))[:, :s]
+    out = constrain(out, "batch", None, None)
+    if cfg.num_shared_experts:
+        out = out + _shared_ffn(cfg, p, x)
+    return out, aux

@@ -1,0 +1,298 @@
+"""Model assembly: init / train-forward / prefill / single-token decode.
+
+Layers are grouped into repeating *blocks* of ``cfg.block_period`` sub-layers
+(1 for homogeneous stacks; 8 for Jamba's [7 mamba + 1 attn] pattern).  Block
+parameters are stacked along a leading ``n_blocks`` axis and iterated with
+``lax.scan`` so the compiled HLO is one block body regardless of depth —
+essential for the 72-layer/398B dry-runs.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models import moe as moe_mod
+from repro.models.common import dense_init, embed_init, rms_norm
+from repro.parallel.act import constrain
+
+AUX_LOSS_WEIGHT = 0.01
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+# ---------------------------------------------------------------- init ------
+
+def _init_mlp(cfg: ModelConfig, key) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], (d, f)),
+         "w2": dense_init(ks[1], (f, d),
+                          scale=1.0 / math.sqrt(2 * cfg.num_layers))}
+    if cfg.mlp_variant == "swiglu":
+        p["w3"] = dense_init(ks[2], (d, f))
+    return p
+
+
+def _layer_has_ffn(cfg: ModelConfig, j: int) -> bool:
+    if cfg.layer_is_moe(j):
+        return True
+    return cfg.d_ff > 0
+
+
+def _init_sublayer(cfg: ModelConfig, j: int, key) -> Params:
+    kind = cfg.layer_kind(j)
+    ks = jax.random.split(key, 2)
+    p: Params = {"norm1": jnp.ones((cfg.d_model,), jnp.bfloat16)}
+    if kind == "ssm":
+        p["mixer"] = mamba2.init_mamba2(cfg, ks[0])
+    elif cfg.attention == "mla":
+        p["mixer"] = attn.init_mla(cfg, ks[0])
+    else:
+        p["mixer"] = attn.init_gqa(cfg, ks[0])
+    if _layer_has_ffn(cfg, j):
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.bfloat16)
+        if cfg.layer_is_moe(j):
+            p["ffn"] = moe_mod.init_moe(cfg, ks[1])
+        else:
+            p["ffn"] = _init_mlp(cfg, ks[1])
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    period = cfg.block_period
+    nb = cfg.num_layers // period
+    keys = jax.random.split(key, period + 2)
+    blocks = {}
+    for j in range(period):
+        sub_keys = jax.random.split(keys[j], nb)
+        blocks[f"sub{j}"] = jax.vmap(partial(_init_sublayer, cfg, j))(sub_keys)
+    params: Params = {
+        "embed": embed_init(keys[-2], (cfg.vocab_size, cfg.d_model)),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.bfloat16),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[-1], (cfg.d_model, cfg.vocab_size))
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count (no allocation)."""
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(math.prod(l.shape)
+               for l in jax.tree_util.tree_leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters active per token (MoE: top_k + shared experts only)."""
+    total = param_count(cfg)
+    if not cfg.num_experts:
+        return total
+    n_moe_layers = sum(1 for l in range(cfg.num_layers) if cfg.layer_is_moe(l))
+    per_expert = cfg.d_model * cfg.moe_d_ff * (3 if cfg.mlp_variant == "swiglu" else 2)
+    inactive = n_moe_layers * per_expert * (cfg.num_experts - cfg.top_k)
+    return total - inactive
+
+
+# ------------------------------------------------------------- forward ------
+
+def _mlp_apply(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    h = x @ p["w1"]
+    if cfg.mlp_variant == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", None, "ffn")
+    return constrain(h @ p["w2"], "batch", "seq", None)
+
+
+def _sublayer_train(cfg: ModelConfig, j: int, p: Params, x: jax.Array,
+                    positions: jax.Array) -> Tuple[jax.Array, Cache, jax.Array]:
+    kind = cfg.layer_kind(j)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "ssm":
+        out, cache = mamba2.mamba2_forward(cfg, p["mixer"], h)
+    elif cfg.attention == "mla":
+        out, cache = attn.mla_attend_train(cfg, p["mixer"], h, positions)
+    else:
+        out, cache = attn.gqa_attend_train(cfg, p["mixer"], h, positions)
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if _layer_has_ffn(cfg, j):
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.layer_is_moe(j):
+            out, aux = moe_mod.moe_ffn(cfg, p["ffn"], h)
+        else:
+            out = _mlp_apply(cfg, p["ffn"], h)
+        x = x + out
+    return x, cache, aux
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]
+                  ) -> jax.Array:
+    tok = params["embed"][batch["tokens"]]             # (b, s_text, d)
+    if cfg.num_modal_tokens:
+        x = jnp.concatenate([batch["modal_embeds"].astype(tok.dtype), tok],
+                            axis=1)
+    else:
+        x = tok
+    return x
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], *,
+            want_cache: bool = False, remat: bool = True
+            ) -> Tuple[jax.Array, jax.Array, Optional[Cache]]:
+    """Full-sequence forward (train / prefill).
+
+    batch: tokens (b, s_text) int32 [+ modal_embeds (b, m, d)].
+    Returns (logits (b, s, V) bf16, aux_loss scalar, cache or None).
+    """
+    x = _embed_inputs(cfg, params, batch)
+    b, s, d = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    period = cfg.block_period
+
+    def block_body(carry, bp):
+        x, aux = carry
+        # Megatron-style sequence parallelism at block boundaries: 'seq'
+        # resolves to 'model' only for archs whose head counts do not divide
+        # the model axis (act.py); otherwise it is a no-op.
+        x = constrain(x, "batch", "seq", None)
+        caches = {}
+        for j in range(period):
+            x, cache, a = _sublayer_train(cfg, j, bp[f"sub{j}"], x, positions)
+            x = constrain(x, "batch", "seq", None)
+            aux = aux + a
+            if want_cache:
+                caches[f"sub{j}"] = cache
+        return (x, aux), caches if want_cache else None
+
+    body = jax.checkpoint(block_body) if remat else block_body
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, aux, caches
+
+
+# -------------------------------------------------------------- decode ------
+
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int,
+               dtype=jnp.bfloat16) -> Cache:
+    """Zero-initialised decode cache.  Attention caches are ring buffers of
+    min(cache_len, sliding_window) slots; SSM caches are O(1)."""
+    period = cfg.block_period
+    nb = cfg.num_layers // period
+    b = batch_size
+    caches = {}
+    for j in range(period):
+        kind = cfg.layer_kind(j)
+        if kind == "ssm":
+            ch = cfg.d_inner + 2 * cfg.ssm_state
+            sub = {"conv": jnp.zeros((nb, b, cfg.ssm_conv - 1, ch), dtype),
+                   "ssd": jnp.zeros((nb, b, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                                     cfg.ssm_state), jnp.float32)}
+        elif cfg.attention == "mla":
+            S = cache_len
+            sub = {"c_kv": jnp.zeros((nb, b, S, cfg.kv_lora_rank), dtype),
+                   "k_rope": jnp.zeros((nb, b, S, cfg.qk_rope_head_dim), dtype)}
+        else:
+            S = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+            sub = {"k": jnp.zeros((nb, b, S, cfg.num_kv_heads, cfg.head_dim), dtype),
+                   "v": jnp.zeros((nb, b, S, cfg.num_kv_heads, cfg.head_dim), dtype)}
+        caches[f"sub{j}"] = sub
+    return caches
+
+
+def cache_from_prefill(cfg: ModelConfig, prefill_caches: Cache, cache_len: int
+                       ) -> Cache:
+    """Convert stacked prefill k/v (nb, b, s, ...) into ring-buffer caches."""
+    out = {}
+    for j_name, sub in prefill_caches.items():
+        kind_is_ssm = "ssd" in sub
+        if kind_is_ssm:
+            out[j_name] = sub
+            continue
+        conv = {}
+        for name, arr in sub.items():
+            if name in ("k", "v", "c_kv", "k_rope"):
+                s = arr.shape[2]
+                S = cache_len
+                if name in ("k", "v") and cfg.sliding_window:
+                    S = min(S, cfg.sliding_window)
+                if s >= S:
+                    arr = arr[:, :, s - S:]
+                else:
+                    pad = [(0, 0)] * arr.ndim
+                    pad[2] = (0, S - s)
+                    arr = jnp.pad(arr, pad)
+                conv[name] = arr
+            else:
+                conv[name] = arr
+        out[j_name] = conv
+    return out
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Cache, pos: jax.Array
+                ) -> Tuple[jax.Array, Cache]:
+    """One-token decode.  tokens: (b, 1) int32; pos: scalar int32 (absolute
+    position of the incoming token).  Returns (logits (b, 1, V), new cache)."""
+    x = params["embed"][tokens]                        # (b, 1, d)
+    period = cfg.block_period
+
+    def block_body(x, scanned):
+        bp, bcache = scanned
+        new_caches = {}
+        for j in range(period):
+            p = bp[f"sub{j}"]
+            c = bcache[f"sub{j}"]
+            kind = cfg.layer_kind(j)
+            h = rms_norm(x, p["norm1"], cfg.norm_eps)
+            if kind == "ssm":
+                out, nc = mamba2.mamba2_decode(cfg, p["mixer"], h, c)
+            elif cfg.attention == "mla":
+                out, nc = attn.mla_attend_decode(cfg, p["mixer"], h, c, pos)
+            else:
+                out, nc = attn.gqa_attend_decode(cfg, p["mixer"], h, c, pos)
+            x = x + out
+            if _layer_has_ffn(cfg, j):
+                h = rms_norm(x, p["norm2"], cfg.norm_eps)
+                if cfg.layer_is_moe(j):
+                    out, _ = moe_mod.moe_ffn(cfg, p["ffn"], h)
+                else:
+                    out = _mlp_apply(cfg, p["ffn"], h)
+                x = x + out
+            new_caches[f"sub{j}"] = nc
+        return x, new_caches
+
+    x, new_cache = jax.lax.scan(block_body, x, (params["blocks"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------- loss ------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy in fp32.  logits: (..., V); labels: (...)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

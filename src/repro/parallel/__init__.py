@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (  # noqa: F401
+    param_specs, batch_specs, cache_specs, shardings, data_axes, model_axis,
+)

@@ -1,0 +1,252 @@
+"""Sharding rules: map every parameter / activation / cache leaf to a
+PartitionSpec over the production mesh axes.
+
+Mesh axes: ``('data', 'model')`` single-pod, ``('pod', 'data', 'model')``
+multi-pod.  The pod axis composes with data parallelism — MARP's (d, t) plan
+maps d -> ('pod', 'data') and t -> 'model' (DESIGN.md §3).
+
+ZeRO levels (TrainConfig.zero):
+  0 — optimizer state replicated over data (paper's 20 B/param verbatim)
+  1 — optimizer state + gradient accumulator sharded over data (default)
+  3 — bf16 params additionally sharded over data (fully sharded)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def _leaf_path(path) -> Tuple[str, ...]:
+    out = []
+    for e in path:
+        if hasattr(e, "key"):
+            out.append(str(e.key))
+        elif hasattr(e, "name"):
+            out.append(str(e.name))
+    return tuple(out)
+
+
+# --------------------------------------------------------- param specs ------
+
+def attn_head_sharded(cfg: ModelConfig, tp: int) -> bool:
+    """Shard attention by heads when every head count divides tp; otherwise
+    fall back to sharding head_dim (always 64/128-aligned)."""
+    if cfg.attention == "mla":
+        return cfg.num_heads % tp == 0
+    return cfg.num_heads % tp == 0 and cfg.num_kv_heads % tp == 0
+
+
+def expert_sharded(cfg: ModelConfig, tp: int) -> bool:
+    return cfg.num_experts > 0 and cfg.num_experts % tp == 0
+
+
+def _param_rule(cfg: ModelConfig, names: Tuple[str, ...], ndim: int,
+                shape: Tuple[int, ...], tp: int) -> P:
+    """Spec for one parameter leaf (dims exclude the stacked block axis)."""
+    leaf = names[-1]
+    in_blocks = "blocks" in names
+    heads = attn_head_sharded(cfg, tp)
+
+    def blk(*spec):
+        return P(None, *spec) if in_blocks else P(*spec)
+
+    if leaf == "embed":
+        if cfg.vocab_size % tp == 0:
+            return P("model", None)
+        return P(None, "model")
+    if leaf == "lm_head":
+        if cfg.vocab_size % tp == 0:
+            return P(None, "model")
+        return P("model", None)
+    if leaf in ("final_norm",):
+        return P(None)
+    if leaf in ("norm1", "norm2", "q_ln", "kv_ln"):
+        return blk(None)
+    # ---- attention: (d, H|K, hd) and (H, hd, d) ----
+    if leaf in ("wq", "wk", "wv"):
+        return blk(None, "model", None) if heads else blk(None, None, "model")
+    if leaf == "wo":
+        return blk("model", None, None) if heads else blk(None, "model", None)
+    if leaf in ("wq_b", "wk_b", "wv_b"):      # (r, H, k)
+        return blk(None, "model", None) if heads else blk(None, None, "model")
+    if leaf == "wq_a":                        # (d, r_q)
+        return blk(None, "model")
+    if leaf == "wkv_a":                       # (d, r_kv+dr) — latent is shared
+        return blk(None, None)
+    # ---- dense mlp / shared experts ----
+    if leaf in ("w1", "w3", "shared_w1", "shared_w3") and "ffn" in names \
+            and not _is_expert(shape, cfg):
+        return blk(None, "model")
+    if leaf in ("w2", "shared_w2") and "ffn" in names \
+            and not _is_expert(shape, cfg):
+        return blk("model", None)
+    # ---- moe experts (E, d, f) / (E, f, d) ----
+    if leaf in ("w1", "w3") and _is_expert(shape, cfg):
+        if expert_sharded(cfg, tp):
+            return blk("model", None, None)   # expert parallel
+        return blk(None, None, "model")       # tp inside experts
+    if leaf == "w2" and _is_expert(shape, cfg):
+        if expert_sharded(cfg, tp):
+            return blk("model", None, None)
+        return blk(None, "model", None)
+    if leaf == "router":
+        return blk(None, None)
+    # ---- mamba2 ----
+    if leaf == "in_zx":
+        return blk(None, "model")
+    if leaf in ("in_bc", "conv_bc_w", "conv_bc_b"):
+        return blk(None) if ndim == 1 else blk(None, None)
+    if leaf == "in_dt":
+        return blk(None, "model")
+    if leaf == "conv_x_w":
+        return blk(None, "model")
+    if leaf in ("conv_x_b", "norm"):
+        return blk("model")
+    if leaf in ("A_log", "D", "dt_bias"):
+        return blk("model")
+    if leaf == "out_proj":
+        return blk("model", None)
+    raise ValueError(f"no sharding rule for {'/'.join(names)} shape={shape}")
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def enforce_divisibility(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes from dims they do not evenly divide (jit requires
+    exactly tiled input shardings)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, entries):
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            axis = None
+        out.append(axis)
+    return P(*out)
+
+
+def _is_expert(shape, cfg: ModelConfig) -> bool:
+    return len(shape) == 3 and cfg.num_experts > 0 and shape[0] == cfg.num_experts
+
+
+def _with_data(spec: P, shape: Tuple[int, ...], daxes: Tuple[str, ...]) -> P:
+    """ZeRO: additionally shard the largest unsharded dim over data axes."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_sz = None, 0
+    for i, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s > best_sz:
+            best, best_sz = i, s
+    if best is None or best_sz < 2:
+        return spec
+    entries[best] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*entries)
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh, *,
+                zero_data: bool = False) -> Any:
+    """Pytree of PartitionSpec matching the params pytree.
+
+    zero_data=True additionally shards over the data axes (ZeRO-3 params, or
+    optimizer/master state at ZeRO>=1)."""
+    tp = mesh.shape.get("model", 1)
+    daxes = data_axes(mesh)
+
+    def spec_of(path, leaf):
+        names = _leaf_path(path)
+        in_blocks = "blocks" in names
+        shape = tuple(leaf.shape)
+        eff_shape = shape[1:] if in_blocks else shape
+        spec = _param_rule(cfg, names, len(eff_shape), eff_shape, tp)
+        spec = enforce_divisibility(spec, shape, mesh)
+        if zero_data and daxes:
+            spec = _with_data(spec, shape, daxes)
+            spec = enforce_divisibility(spec, shape, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+def shardings(tree_of_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------- batch specs ------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Any:
+    """Input sharding for a training/prefill/decode batch."""
+    daxes = data_axes(mesh)
+    dax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    n_dev = 1
+    for a in data_axes(mesh):
+        n_dev *= mesh.shape[a]
+    bshard = dax if shape.global_batch % max(n_dev, 1) == 0 else None
+    specs = {"tokens": P(bshard, None)}
+    if cfg.num_modal_tokens and shape.kind != "decode":
+        specs["modal_embeds"] = P(bshard, None, None)
+    if shape.kind == "train":
+        specs["labels"] = P(bshard, None)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Any:
+    """Decode-cache sharding.  Batch over data axes when divisible; for
+    global_batch=1 (long_500k) the sequence dim is sharded over data
+    instead so the 500k-token cache is distributed."""
+    daxes = data_axes(mesh)
+    dax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    n_dev = 1
+    for a in data_axes(mesh):
+        n_dev *= mesh.shape[a]
+    batch_ok = shape.global_batch % max(n_dev, 1) == 0
+    b_ax = dax if batch_ok else None
+    s_ax = None if batch_ok else dax
+
+    tp = mesh.shape.get("model", 1)
+    heads = attn_head_sharded(cfg, tp)
+    period = cfg.block_period
+    out = {}
+    for j in range(period):
+        kind = cfg.layer_kind(j)
+        if kind == "ssm":
+            sub = {"conv": P(None, b_ax, None, "model"),
+                   "ssd": P(None, b_ax, "model", None, None)}
+        elif cfg.attention == "mla":
+            sub = {"c_kv": P(None, b_ax, s_ax, None),
+                   "k_rope": P(None, b_ax, s_ax, None)}
+        elif heads:
+            sub = {"k": P(None, b_ax, s_ax, "model", None),
+                   "v": P(None, b_ax, s_ax, "model", None)}
+        else:
+            sub = {"k": P(None, b_ax, s_ax, None, "model"),
+                   "v": P(None, b_ax, s_ax, None, "model")}
+        out[f"sub{j}"] = sub
+    return out
+
+
+def prefill_cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                        mesh: Mesh) -> Any:
+    """Sharding for the cache pytree *as returned by prefill* (full-sequence
+    k/v of shape (nb, b, s, K, hd), before ring conversion)."""
+    return cache_specs(cfg, shape, mesh)

@@ -1,0 +1,1 @@
+from repro.serve.engine import prefill, serve_step, greedy_decode  # noqa: F401

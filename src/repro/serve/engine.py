@@ -1,0 +1,48 @@
+"""Serving substrate: batched prefill + single-token decode steps with
+sharded KV / SSM-state caches.  ``serve_step`` is what the decode-shape
+dry-runs lower (one new token against a seq_len-deep cache)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import (forward, decode_step, init_cache,
+                          cache_from_prefill)
+
+
+def prefill(cfg: ModelConfig, params: Any, batch: Dict[str, jax.Array],
+            cache_len: int) -> Tuple[jax.Array, Any]:
+    """Run the full prompt; return (last-token logits, decode-ready cache)."""
+    logits, _, caches = forward(cfg, params, batch, want_cache=True)
+    cache = cache_from_prefill(cfg, caches, cache_len)
+    return logits[:, -1:, :], cache
+
+
+def serve_step(cfg: ModelConfig, params: Any, tokens: jax.Array,
+               cache: Any, pos: jax.Array) -> Tuple[jax.Array, Any]:
+    """One decode step: tokens (b, 1) -> (logits (b, 1, V), new cache)."""
+    return decode_step(cfg, params, tokens, cache, pos)
+
+
+def greedy_decode(cfg: ModelConfig, params: Any, prompt: jax.Array,
+                  n_steps: int, cache_len: int) -> jax.Array:
+    """Reference autoregressive loop (tests/examples; not the dry-run path)."""
+    batch = {"tokens": prompt}
+    if cfg.num_modal_tokens:
+        b = prompt.shape[0]
+        batch["modal_embeds"] = jnp.zeros(
+            (b, cfg.num_modal_tokens, cfg.d_model), jnp.bfloat16)
+    logits, cache = prefill(cfg, params, batch, cache_len)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    toks = [tok]
+    pos = prompt.shape[1] + cfg.num_modal_tokens
+    for i in range(n_steps - 1):
+        logits, cache = serve_step(cfg, params, tok, cache,
+                                   jnp.int32(pos + i))
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        toks.append(tok)
+    return jnp.concatenate(toks, axis=1)

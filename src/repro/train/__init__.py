@@ -1,0 +1,4 @@
+from repro.train.train_loop import (  # noqa: F401
+    build_train_step, make_train_state, state_specs, resolve_microbatches,
+)
+from repro.train.optimizer import adam_update, init_opt_state, lr_at  # noqa: F401

@@ -1,0 +1,74 @@
+"""Mixed-precision Adam matching the paper's 20-byte/param accounting:
+bf16 params (2) + bf16/fp32 grads (2-4 transient) + fp32 master (4) +
+Adam m (4) + v (4).  ZeRO sharding of the fp32 state is applied by the
+caller via PartitionSpecs (sharding.param_specs(zero_data=True))."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_at(tc: TrainConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to 10%."""
+    warm = jnp.minimum((step + 1.0) / max(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / max(tc.steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tc.learning_rate * warm * cos
+
+
+def init_opt_state(params: Any) -> Dict[str, Any]:
+    # copy=True: fp32 leaves (A_log, D, dt_bias) must not alias the params
+    # buffers, or donation in the jitted step sees the same buffer twice.
+    master = jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True),
+                          params)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"master": master, "m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros)}
+
+
+def adam_update(tc: TrainConfig, params: Any, opt: Dict[str, Any],
+                grads: Any, step: jax.Array
+                ) -> Tuple[Any, Dict[str, Any], jax.Array]:
+    """One Adam step.  grads are fp32, already mean-reduced.  Returns
+    (new bf16 params, new opt state, global grad norm)."""
+    lr = lr_at(tc, step)
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - tc.beta1 ** t
+    c2 = 1.0 - tc.beta2 ** t
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+
+    def upd(g, m, v, mp):
+        g = g.astype(jnp.float32)
+        m = tc.beta1 * m + (1.0 - tc.beta1) * g
+        v = tc.beta2 * v + (1.0 - tc.beta2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = tc.weight_decay if mp.ndim >= 2 else 0.0
+        new_mp = mp - lr * (mhat / (jnp.sqrt(vhat) + tc.eps) + wd * mp)
+        return m, v, new_mp
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt["m"])
+    flat_v = treedef.flatten_up_to(opt["v"])
+    flat_p = treedef.flatten_up_to(opt["master"])
+    new_m, new_v, new_master = [], [], []
+    for g, m, v, mp in zip(flat_g, flat_m, flat_v, flat_p):
+        m2, v2, p2 = upd(g, m, v, mp)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_master.append(p2)
+    new_opt = {"master": treedef.unflatten(new_master),
+               "m": treedef.unflatten(new_m),
+               "v": treedef.unflatten(new_v)}
+    new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype),
+                              new_opt["master"], params)
+    return new_params, new_opt, gnorm

@@ -1,0 +1,76 @@
+"""MARP memory model: paper formulas + exact analytic counts."""
+import math
+
+import pytest
+
+from repro.configs.registry import ARCHS, ASSIGNED
+from repro.core import memory_model as mm
+from repro.models import param_count
+
+
+def test_paper_param_count_gpt2_350m():
+    # V=50257, h=1024, l=24 -> ~354M (the paper's W formula)
+    W = mm.paper_param_count(50257, 1024, 24)
+    assert 3.0e8 < W < 4.0e8
+
+
+def test_paper_static_bytes_20x():
+    W = 1_000_000
+    assert mm.paper_static_bytes(W, 1) == 20e6
+    assert mm.paper_static_bytes(W, 4) == 5e6
+
+
+def test_paper_activation_formula_shape():
+    # monotone in s, b; decreasing in t
+    a1 = mm.paper_activation_bytes(1024, 8, 1024, 24, 16, 1)
+    a2 = mm.paper_activation_bytes(2048, 8, 1024, 24, 16, 1)
+    a3 = mm.paper_activation_bytes(1024, 8, 1024, 24, 16, 4)
+    assert a2 > a1 > a3
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_analytic_matches_eval_shape(arch):
+    cfg = ARCHS[arch]
+    assert mm.analytic_param_count(cfg) == param_count(cfg)
+
+
+def test_paper_formula_close_to_exact_for_gpt2():
+    """The paper's W approximation should be within 3% of the real count
+    for vanilla GPT-2 style models (its own validation domain)."""
+    for name in ("gpt2-350m", "gpt2-7b"):
+        cfg = ARCHS[name]
+        W_paper = mm.paper_param_count(cfg.vocab_size, cfg.d_model,
+                                       cfg.num_layers)
+        W_exact = mm.analytic_param_count(cfg)
+        assert abs(W_paper - W_exact) / W_exact < 0.03, name
+
+
+def test_static_bytes_zero_levels():
+    cfg = ARCHS["llama3.2-3b"]
+    s0 = mm.static_bytes(cfg, t=4, d=8, zero=0)
+    s1 = mm.static_bytes(cfg, t=4, d=8, zero=1)
+    s3 = mm.static_bytes(cfg, t=4, d=8, zero=3)
+    assert s0 > s1 > s3
+    W = mm.analytic_param_count(cfg)
+    assert abs(s0 - 20 * W / 4) / s0 < 1e-9          # paper's 20W/t at zero=0
+
+
+def test_activation_bytes_remat_smaller():
+    cfg = ARCHS["llama3.2-3b"]
+    a_remat = mm.activation_bytes(cfg, 4096, 1, 16, remat="block")
+    a_full = mm.activation_bytes(cfg, 4096, 1, 16, remat="none")
+    assert a_remat < a_full
+
+
+def test_serve_peak_bytes_window_caps_cache():
+    sc = ARCHS["starcoder2-7b"]           # window 4096
+    full = mm.serve_peak_bytes(sc, 1, 524_288, 1, 16)
+    short = mm.serve_peak_bytes(sc, 1, 4_096, 1, 16)
+    assert full == short                   # ring buffer = window
+
+
+def test_moe_active_fraction():
+    cfg = ARCHS["mixtral-8x22b"]
+    from repro.models import active_param_count
+    total, active = param_count(cfg), active_param_count(cfg)
+    assert 0.25 < active / total < 0.31    # 39B/141B
