@@ -1,0 +1,62 @@
+"""Control-plane scale benchmark: full simulation wall time and scheduler
+overhead for the Frenzy scheduler on large clusters and deep job queues.
+
+Grid: {100, 1k, 10k} nodes x {100, 1k, 5k} jobs (``--skip-slow`` runs the
+small corner only).  Rows report the mean scheduler wall time per call (us)
+and simulated events processed per second of real time — the metric the
+indexed ClusterPool + incremental event loop are built for.
+
+    PYTHONPATH=src python -m benchmarks.sched_scale [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.cluster.schedulers import FrenzyScheduler
+from repro.cluster.simulator import simulate
+from repro.cluster.traces import scale_workload
+from repro.core.orchestrator import make_cluster
+
+FULL_GRID = [(100, 100), (100, 1_000), (100, 5_000),
+             (1_000, 100), (1_000, 1_000), (1_000, 5_000),
+             (10_000, 100), (10_000, 1_000), (10_000, 5_000)]
+QUICK_GRID = [(100, 100), (1_000, 1_000)]
+
+
+def make_scaled_cluster(n_nodes: int):
+    """Heterogeneous cluster of ~n_nodes in the paper sim cluster's 3:2:1
+    device-class mix (§V-A)."""
+    a = n_nodes // 2
+    b = n_nodes // 3
+    c = n_nodes - a - b
+    return make_cluster([(a, 8, "RTX2080Ti"), (b, 8, "A100-40G"),
+                         (c, 4, "RTX6000")])
+
+
+def run(quick: bool = False):
+    rows = []
+    for n_nodes, n_jobs in (QUICK_GRID if quick else FULL_GRID):
+        nodes = make_scaled_cluster(n_nodes)
+        types = sorted({n.device_type for n in nodes})
+        jobs = scale_workload(n_jobs, types, seed=17)
+        t0 = time.perf_counter()
+        res = simulate(jobs, nodes, FrenzyScheduler(), charge_overhead=False)
+        wall = time.perf_counter() - t0
+        per_call_us = (res.sched_time_s / max(res.sched_calls, 1)) * 1e6
+        events_per_s = 2 * n_jobs / wall      # arrivals + finishes
+        rows.append((f"sched_scale/frenzy/n{n_nodes}_j{n_jobs}",
+                     per_call_us, round(events_per_s, 1)))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    for name, us, derived in run(quick=args.quick):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

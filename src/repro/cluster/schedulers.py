@@ -1,35 +1,83 @@
 """Schedulers for the simulator: Frenzy (MARP+HAS), Sia-like ILP baseline,
-and Opportunistic/FCFS (Lyra-style) baseline (paper §V-A-c)."""
+and Opportunistic/FCFS (Lyra-style) baseline (paper §V-A-c).
+
+Scheduler state contract: ``schedule(queued, state)`` accepts either the
+simulator's long-lived ``ClusterPool`` (the fast path — incrementally
+indexed, shared with the event loop) or a plain ``{node_id: Node}`` dict
+(legacy callers, e.g. the overhead benchmark).  A scheduler that sets
+``applies_to_pool = True`` commits its placements to a shared pool itself,
+so the caller must not re-apply them; with a dict it works on a private
+snapshot and the caller applies the returned decisions, exactly like the
+seed ``_clone_nodes`` protocol.
+"""
 from __future__ import annotations
 
-import copy
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.devices import DEVICE_TYPES
-from repro.core.has import Node, schedule as has_schedule
-from repro.core.marp import ResourcePlan
+from repro.core.has import ClusterPool, Node
+from repro.core.marp import (_active_analytic, _dp_efficiency,
+                             _tp_efficiency)
 from repro.cluster.simulator import Scheduler, SimJob, job_rate
 
+ClusterState = Union[ClusterPool, Dict[str, Node]]
 
-def _clone_nodes(nodes: Dict[str, Node]) -> Dict[str, Node]:
-    return {k: copy.copy(v) for k, v in nodes.items()}
+
+def _nodes_map(state: ClusterState) -> Dict[str, Node]:
+    return state.nodes if isinstance(state, ClusterPool) else state
+
+
+def _snapshot_nodes(state: ClusterState) -> Dict[str, Node]:
+    """Private mutable copies, seed ``_clone_nodes`` semantics."""
+    return {k: Node(v.node_id, v.device_type, v.mem, v.total, v.idle)
+            for k, v in _nodes_map(state).items()}
+
+
+def _fifo(queued: Sequence[SimJob]) -> List[SimJob]:
+    return sorted(queued, key=lambda j: (j.arrival, j.job_id))
 
 
 class FrenzyScheduler(Scheduler):
-    """MARP's ranked plans + HAS best-fit placement, FIFO order."""
-    name = "frenzy"
+    """MARP's ranked plans + HAS best-fit placement, FIFO order.
 
-    def schedule(self, queued, nodes):
-        work = _clone_nodes(nodes)
+    Runs directly against the indexed ``ClusterPool``: plan retrieval is a
+    per-plan counter lookup and placement touches only the entries it
+    selects, so a pass is O(queue x plans) instead of O(queue x plans x
+    nodes).  Placements are committed to a shared pool as jobs are admitted
+    (``applies_to_pool``) — a rejected job mutates nothing, so there is no
+    rollback path.
+    """
+    name = "frenzy"
+    applies_to_pool = True
+
+    def schedule(self, queued, state):
+        if isinstance(state, ClusterPool):
+            pool = state
+        else:
+            pool = ClusterPool(_snapshot_nodes(state).values())
+        select_plan = pool.select_plan
+        find_placements = pool.find_placements
         out = []
-        for job in sorted(queued, key=lambda j: (j.arrival, j.job_id)):
-            alloc = has_schedule(job.plans, list(work.values()))
-            if alloc is None:
+        # Identical plan lists are shared objects (predict_plans_shared), and
+        # within one pass capacity only shrinks (admissions take, nothing
+        # frees) — so a plan list that found no feasible plan stays
+        # infeasible for the rest of the pass.  Dedupe those no-fit walks by
+        # object identity.
+        no_fit = set()
+        for job in _fifo(queued):
+            plans_key = id(job.plans)
+            if plans_key in no_fit:
                 continue                    # backfill: later jobs may fit
-            for node_id, k in alloc.placements:
-                work[node_id].idle -= k
-            out.append((job, alloc.placements, alloc.plan.d, alloc.plan.t))
+            plan = select_plan(job.plans)
+            if plan is None:
+                no_fit.add(plans_key)
+                continue
+            placements = find_placements(plan)
+            if placements is None:
+                continue
+            pool.apply(placements)
+            out.append((job, placements, plan.d, plan.t))
         return out
 
 
@@ -38,11 +86,12 @@ class OpportunisticScheduler(Scheduler):
     for the user-specified device count (Lyra-style opportunistic)."""
     name = "opportunistic"
 
-    def schedule(self, queued, nodes):
-        work = _clone_nodes(nodes)
+    def schedule(self, queued, state):
+        nodes = _nodes_map(state)
+        work = _snapshot_nodes(state)
         total = sum(n.total for n in nodes.values())
         out = []
-        for job in sorted(queued, key=lambda j: (j.arrival, j.job_id)):
+        for job in _fifo(queued):
             # manual trial-and-error: the user walks the plan list until one
             # is physically satisfiable by this cluster's device classes
             plan = None
@@ -74,9 +123,7 @@ class OpportunisticScheduler(Scheduler):
                 break                               # FCFS blocking
             for node_id, k in placements:
                 work[node_id].idle -= k
-            d = plan.d if plan else need
-            t = plan.t if plan else 1
-            out.append((job, tuple(placements), d, t))
+            out.append((job, tuple(placements), plan.d, plan.t))
         return out
 
 
@@ -89,10 +136,10 @@ class ElasticFlowScheduler(Scheduler):
     on slow classes (the deficiency the paper attributes to it)."""
     name = "elasticflow"
 
-    def schedule(self, queued, nodes):
-        work = _clone_nodes(nodes)
+    def schedule(self, queued, state):
+        work = _snapshot_nodes(state)
         out = []
-        for job in sorted(queued, key=lambda j: (j.arrival, j.job_id)):
+        for job in _fifo(queued):
             if not job.plans:
                 continue
             idle = sum(n.idle for n in work.values())
@@ -136,15 +183,16 @@ class SiaScheduler(Scheduler):
         self.max_nodes = max_nodes
         self.max_configs = max_configs
 
-    def schedule(self, queued, nodes):
+    def schedule(self, queued, state):
         if not queued:
             return []
+        nodes = _nodes_map(state)
         # idle devices per type, and nodes per type for final placement
         idle_by_type: Dict[str, int] = {}
         for n in nodes.values():
             idle_by_type[n.device_type] = idle_by_type.get(n.device_type, 0) + n.idle
         types = sorted(idle_by_type)
-        jobs = sorted(queued, key=lambda j: (j.arrival, j.job_id))
+        jobs = _fifo(queued)
 
         # candidate configs per job: (type_idx, n, d, t, rate).  Sia
         # schedules at the user-specified GPU count (paper §V-A-c): it
@@ -164,8 +212,6 @@ class SiaScheduler(Scheduler):
                 dev = DEVICE_TYPES[plan.device_type]
                 if dev.mem < plan.min_mem:
                     continue
-                from repro.core.marp import _tp_efficiency, _dp_efficiency, \
-                    _active_analytic
                 fps = 6.0 * _active_analytic(job.cfg) * job.seq_len
                 rate = (plan.n_devices * dev.flops * 0.45
                         * _tp_efficiency(plan.t, dev)
@@ -204,11 +250,11 @@ class SiaScheduler(Scheduler):
         out = []
         if best["choice"] is None:
             return out
-        work = _clone_nodes(nodes)
-        for job, ci in zip(jobs, best["choice"]):
+        work = _snapshot_nodes(state)
+        for ji, (job, ci) in enumerate(zip(jobs, best["choice"])):
             if ci is None:
                 continue
-            ti, n, d, t, rate = cands[jobs.index(job)][ci]
+            ti, n, d, t, rate = cands[ji][ci]
             dtype = types[ti]
             placements: List[Tuple[str, int]] = []
             left = n

@@ -8,17 +8,24 @@ a job's rate is ``n_devices x min(per-device rate) x efficiency terms``
 penalty) — the same structure MARP's ranking uses, so Frenzy's plan priority
 is *consistent* with the simulated world (as in the paper, where MARP's
 estimates come from the same profiles the testbed exhibits).
+
+Scaling: cluster state lives in a single ``ClusterPool`` shared with the
+scheduler (no per-event snapshot copies), and the event loop is
+incremental — a finish event only re-runs the scheduler when the freed
+capacity could actually admit a queued job (total idle >= the smallest
+device count any queued job can run at).  Skipped runs cannot change
+outcomes: admission always needs at least one job's cheapest plan.
 """
 from __future__ import annotations
 
 import heapq
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.devices import DEVICE_TYPES
-from repro.core.has import Node
+from repro.core.has import ClusterPool, Node
 from repro.core.marp import ResourcePlan, _tp_efficiency, _dp_efficiency, \
     _active_analytic
 
@@ -47,6 +54,15 @@ class SimJob:
     def jct(self) -> float:
         return self.finish_time - self.arrival
 
+    @property
+    def min_devices(self) -> int:
+        """Fewest devices any admission of this job could use — the
+        simulator's re-schedule gate (scheduler-agnostic lower bound)."""
+        need = min((p.n_devices for p in self.plans), default=1)
+        if self.requested_n:
+            need = min(need, self.requested_n)
+        return need
+
 
 @dataclass
 class SimResult:
@@ -72,76 +88,99 @@ class SimResult:
 def job_rate(job: SimJob, placements: Sequence[Tuple[str, int]],
              nodes: Dict[str, Node], d: int, t: int) -> float:
     """Samples/s of a placed job (synchronous DP: slowest device gates)."""
-    devs = []
+    n_devices = 0
+    slowest = None
+    first_type = nodes[placements[0][0]].device_type
     for node_id, k in placements:
-        devs.extend([nodes[node_id].device_type] * k)
-    slowest = min(DEVICE_TYPES[dt].flops for dt in devs)
-    dev = DEVICE_TYPES[devs[0]]
+        dt = nodes[node_id].device_type
+        flops = DEVICE_TYPES[dt].flops
+        if slowest is None or flops < slowest:
+            slowest = flops
+        n_devices += k
+    dev = DEVICE_TYPES[first_type]
     n_active = _active_analytic(job.cfg)
     flops_per_sample = 6.0 * n_active * job.seq_len
     eff = 0.45 * _tp_efficiency(t, dev) * _dp_efficiency(d)
     if len({nid for nid, _ in placements}) > 1:
         eff *= 0.75                          # cross-node penalty
-    return len(devs) * slowest * eff / flops_per_sample
+    return n_devices * slowest * eff / flops_per_sample
 
 
 class Scheduler:
-    """Interface: mutate cluster idle counts via returned placements."""
-    name = "base"
+    """Interface: decide placements against the shared cluster state.
 
-    def schedule(self, queued: List[SimJob], nodes: Dict[str, Node]
+    ``state`` is the simulator's ``ClusterPool`` (or a ``{node_id: Node}``
+    dict from legacy callers).  After ``schedule`` returns, callers must
+    consult ``applied(state)``: True means the scheduler already committed
+    the returned placements to the shared state; False means the caller
+    applies them (a dict is never mutated — pool-aware schedulers work on a
+    private snapshot in that case).
+    """
+    name = "base"
+    applies_to_pool = False          # commits to a *shared ClusterPool* itself
+
+    def schedule(self, queued: List[SimJob], state
                  ) -> List[Tuple[SimJob, Tuple[Tuple[str, int], ...], int, int]]:
         """Return [(job, placements, d, t)] to start now."""
         raise NotImplementedError
+
+    def applied(self, state) -> bool:
+        """Whether ``schedule`` already committed its placements to
+        ``state`` — only ever True for a shared ``ClusterPool``."""
+        return self.applies_to_pool and isinstance(state, ClusterPool)
 
 
 def simulate(jobs: Sequence[SimJob], nodes: Sequence[Node],
              scheduler: Scheduler, charge_overhead: bool = True) -> SimResult:
     """charge_overhead: add measured scheduler wall time to the virtual
     clock (the paper's Fig 5a overhead feeds its JCT comparison)."""
-    nodes_by_id = {n.node_id: n for n in nodes}
-    for n in nodes_by_id.values():
-        n.idle = n.total
+    pool = ClusterPool(nodes, reset=True)
+    applies = scheduler.applied(pool)
     events: List[Tuple[float, int, str, SimJob]] = []
     for j in jobs:
         heapq.heappush(events, (j.arrival, j.job_id, "arrive", j))
     queued: List[SimJob] = []
+    min_need = float("inf")                 # min over queued of min_devices
     sched_time = 0.0
     sched_calls = 0
     makespan = 0.0
     seq = len(jobs)
 
     def run_scheduler(now: float):
-        nonlocal sched_time, sched_calls, seq
+        nonlocal sched_time, sched_calls, seq, min_need
         t0 = time.perf_counter()
-        decisions = scheduler.schedule(queued, nodes_by_id)
+        decisions = scheduler.schedule(queued, pool)
         elapsed = time.perf_counter() - t0
         sched_time += elapsed
         sched_calls += 1
+        if not decisions:
+            return
         start = now + (elapsed if charge_overhead else 0.0)
+        started = set()
         for job, placements, d, t in decisions:
-            for node_id, k in placements:
-                assert nodes_by_id[node_id].idle >= k
-                nodes_by_id[node_id].idle -= k
+            if not applies:
+                pool.apply(placements)      # Node.take asserts capacity
             job.placements = placements
             job.start_time = start
-            job.rate = job_rate(job, placements, nodes_by_id, d, t)
+            job.rate = job_rate(job, placements, pool.nodes, d, t)
             finish = start + job.total_samples / job.rate
             job.finish_time = finish
-            queued.remove(job)
+            started.add(job.job_id)
             seq += 1
             heapq.heappush(events, (finish, seq, "finish", job))
+        queued[:] = [j for j in queued if j.job_id not in started]
+        min_need = min((j.min_devices for j in queued), default=float("inf"))
 
     while events:
         now, _, kind, job = heapq.heappop(events)
         makespan = max(makespan, now)
         if kind == "arrive":
             queued.append(job)
+            min_need = min(min_need, job.min_devices)
             run_scheduler(now)
         else:  # finish
-            for node_id, k in job.placements:
-                nodes_by_id[node_id].idle += k
-            if queued:
+            pool.release(job.placements)
+            if queued and pool.total_idle >= min_need:
                 run_scheduler(now)
     unfinished = [j for j in jobs if j.finish_time < 0]
     assert not unfinished, f"{len(unfinished)} jobs never scheduled"

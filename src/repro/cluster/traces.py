@@ -14,7 +14,7 @@ from dataclasses import replace
 from typing import List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
-from repro.core.marp import predict_plans
+from repro.core.marp import predict_plans_shared
 from repro.cluster.simulator import SimJob
 
 
@@ -44,8 +44,11 @@ BERT_SIZES = {
 def _mk_job(rng: random.Random, job_id: int, arrival: float,
             cfg: ModelConfig, batch: int, seq: int, samples: int,
             device_types: Sequence[str]) -> Optional[SimJob]:
-    plans = predict_plans(cfg, batch, seq, device_types=list(device_types),
-                          max_devices=64)
+    # shared memoized tuple: jobs with the same (cfg, batch, seq) carry the
+    # *same* plan-list object, so schedulers can dedupe no-fit checks
+    plans = predict_plans_shared(cfg, batch, seq,
+                                 device_types=tuple(device_types),
+                                 max_devices=64)
     if not plans:
         return None
     # opportunistic baselines use a "user-specified" count: the smallest
@@ -79,6 +82,34 @@ def new_workload(n_jobs: int, device_types: Sequence[str],
             continue
         # convert target duration to samples using a nominal 1-device rate
         job.total_samples = max(int(minutes * 60 * 2), 1)   # ~2 samples/s nominal
+        jobs.append(job)
+        jid += 1
+    return jobs
+
+
+def scale_workload(n_jobs: int, device_types: Sequence[str], seed: int = 0,
+                   mean_interarrival: float = 1.0,
+                   mean_minutes: float = 10.0) -> List[SimJob]:
+    """Control-plane stress mix for large clusters (benchmarks/sched_scale):
+    the NewWorkload model pool at a high arrival rate with short runtimes,
+    so queues build and drain quickly and the event loop is scheduler-bound.
+    Draws from a small (cfg, batch, seq) key set — as production trace
+    replays do — so MARP's plan cache and the schedulers' shared-plan-list
+    dedupe engage."""
+    rng = random.Random(300 + seed)
+    pool = list(GPT2_SIZES.values()) + list(BERT_SIZES.values())
+    jobs: List[SimJob] = []
+    t, jid = 0.0, 0
+    while len(jobs) < n_jobs:
+        t += rng.expovariate(1.0 / mean_interarrival)
+        cfg = rng.choice(pool)
+        batch = rng.choice([8, 16, 32, 64])
+        seq = rng.choice([512, 1024, 2048])
+        job = _mk_job(rng, jid, t, cfg, batch, seq, 1, device_types)
+        if job is None:
+            continue
+        minutes = rng.lognormvariate(math.log(mean_minutes), 0.8)
+        job.total_samples = max(int(minutes * 60 * 2), 1)
         jobs.append(job)
         jid += 1
     return jobs

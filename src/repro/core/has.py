@@ -10,11 +10,22 @@ first plan the cluster can currently satisfy.
 Stage 2 — heterogeneous placement: best-fit bin packing; prefer the single
 node with the fewest idle devices that fits; else greedily consume the
 largest-remainder node and repeat.
+
+Scaling: both stages run against a ``ClusterPool`` — a transactional
+free-pool that keeps, per (device_type, mem) class, an idle-device counter
+and a sorted node list maintained incrementally by ``apply``/``release``.
+Plan retrieval is then an O(#mem-classes) counter lookup per candidate plan
+(instead of an O(nodes) scan), and placement touches only the handful of
+sorted entries it selects.  Decisions are bit-identical to the original
+per-node scans (golden-equivalence tested): within a class, nodes order by
+(idle desc, insertion order asc), exactly the seed's stable sorts.
 """
 from __future__ import annotations
 
+import heapq
+from bisect import bisect_left, insort
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.marp import ResourcePlan
 
@@ -28,6 +39,17 @@ class Node:
     total: int                    # devices on the node
     idle: int                     # currently idle devices
 
+    def take(self, k: int) -> None:
+        """Claim ``k`` idle devices; drives ``idle`` toward 0, never below."""
+        assert 0 < k <= self.idle, (self.node_id, self.idle, k)
+        self.idle -= k
+
+    def free(self, k: int) -> None:
+        """Return ``k`` devices; never exceeds ``total``."""
+        assert 0 < k and self.idle + k <= self.total, \
+            (self.node_id, self.idle, k, self.total)
+        self.idle += k
+
 
 @dataclass(frozen=True)
 class Allocation:
@@ -39,72 +61,218 @@ class Allocation:
         return len(self.placements)
 
 
-def _eligible(plan: ResourcePlan, n: Node) -> bool:
-    """MARP plans are per-device-type (paper §IV: 'the specific number of
-    GPU cards needed for various types of GPUs'), so a plan is satisfied by
-    its own type; the memory check guards degenerate catalogs."""
-    return n.device_type == plan.device_type and n.mem >= plan.min_mem
+class _Bucket:
+    """All nodes of one (device_type, mem) class.
 
+    ``entries`` holds ``(-idle, pos, node_id)`` for nodes with idle > 0,
+    kept sorted — ascending order is (idle desc, insertion-pos asc), the
+    exact traversal order of the seed's stable ``sort(key=-idle)``.
+    """
+    __slots__ = ("mem", "idle_sum", "entries")
+
+    def __init__(self, mem: int):
+        self.mem = mem
+        self.idle_sum = 0
+        self.entries: List[Tuple[int, int, str]] = []
+
+
+class ClusterPool:
+    """Transactional, incrementally-indexed cluster free-pool.
+
+    All idle-count mutations must go through ``take``/``free`` (or the
+    placement-level ``apply``/``release``) so the per-class index stays in
+    sync with the ``Node`` objects it wraps.  Queries (``select_plan``,
+    ``find_placements``) never mutate; a scheduler stages a decision by
+    computing placements first and applying them after — there is nothing
+    to roll back on the not-admitted path.
+    """
+
+    def __init__(self, nodes: Iterable[Node], *, reset: bool = False):
+        self.nodes: Dict[str, Node] = {}
+        self._pos: Dict[str, int] = {}
+        self._buckets: Dict[Tuple[str, int], _Bucket] = {}
+        self._by_type: Dict[str, List[_Bucket]] = {}   # mem-ascending
+        self.total_idle = 0
+        for n in nodes:
+            if reset:
+                n.idle = n.total
+            self._add(n)
+
+    # ------------------------------------------------------------- build --
+    def _add(self, n: Node) -> None:
+        assert n.node_id not in self.nodes, n.node_id
+        pos = len(self.nodes)
+        self.nodes[n.node_id] = n
+        self._pos[n.node_id] = pos
+        key = (n.device_type, n.mem)
+        bucket = self._buckets.get(key)
+        if bucket is None:
+            bucket = self._buckets[key] = _Bucket(n.mem)
+            blist = self._by_type.setdefault(n.device_type, [])
+            blist.append(bucket)
+            blist.sort(key=lambda b: b.mem)
+        bucket.idle_sum += n.idle
+        if n.idle > 0:
+            insort(bucket.entries, (-n.idle, pos, n.node_id))
+        self.total_idle += n.idle
+
+    # --------------------------------------------------------- mutations --
+    def _reindex(self, bucket: _Bucket, n: Node, pos: int, old_idle: int) -> None:
+        if old_idle > 0:
+            i = bisect_left(bucket.entries, (-old_idle, pos))
+            assert i < len(bucket.entries) and bucket.entries[i][1] == pos
+            bucket.entries.pop(i)
+        if n.idle > 0:
+            insort(bucket.entries, (-n.idle, pos, n.node_id))
+
+    def take(self, node_id: str, k: int) -> None:
+        n = self.nodes[node_id]
+        old = n.idle
+        n.take(k)
+        bucket = self._buckets[(n.device_type, n.mem)]
+        bucket.idle_sum -= k
+        self.total_idle -= k
+        self._reindex(bucket, n, self._pos[node_id], old)
+
+    def free(self, node_id: str, k: int) -> None:
+        n = self.nodes[node_id]
+        old = n.idle
+        n.free(k)
+        bucket = self._buckets[(n.device_type, n.mem)]
+        bucket.idle_sum += k
+        self.total_idle += k
+        self._reindex(bucket, n, self._pos[node_id], old)
+
+    def apply(self, placements: Sequence[Tuple[str, int]]) -> None:
+        for node_id, k in placements:
+            self.take(node_id, k)
+
+    def release(self, placements: Sequence[Tuple[str, int]]) -> None:
+        for node_id, k in placements:
+            self.free(node_id, k)
+
+    # ----------------------------------------------------------- queries --
+    def avail(self, plan: ResourcePlan) -> int:
+        """Idle devices able to host ``plan`` — MARP plans are
+        per-device-type (paper §IV: 'the specific number of GPU cards needed
+        for various types of GPUs'), so a plan is satisfied by its own type;
+        the memory check guards degenerate catalogs."""
+        blist = self._by_type.get(plan.device_type)
+        if not blist:
+            return 0
+        min_mem = plan.min_mem
+        return sum(b.idle_sum for b in blist if b.mem >= min_mem)
+
+    def select_plan(self, plans: Sequence[ResourcePlan]
+                    ) -> Optional[ResourcePlan]:
+        """Stage 1 (Algorithm 1, lines 1-10): first satisfiable plan.
+
+        Per plan this is a couple of integer compares: plans needing more
+        than the whole pool's idle count short-circuit (exact — per-type
+        availability can never exceed total idle), the rest sum a handful
+        of per-class counters.
+        """
+        total = self.total_idle
+        by_type = self._by_type
+        for plan in plans:
+            need = plan.n_devices
+            if need > total:
+                continue
+            blist = by_type.get(plan.device_type)
+            if not blist:
+                continue
+            if len(blist) == 1:            # common case: one mem class
+                b = blist[0]
+                if b.mem >= plan.min_mem and b.idle_sum >= need:
+                    return plan
+                continue
+            min_mem = plan.min_mem
+            if sum(b.idle_sum for b in blist if b.mem >= min_mem) >= need:
+                return plan
+        return None
+
+    def find_placements(self, plan: ResourcePlan
+                        ) -> Optional[Tuple[Tuple[str, int], ...]]:
+        """Stage 2 (Algorithm 1, lines 11-37).  Mutates nothing; returns the
+        placement list or None if resources vanished.
+
+        Placement preference (best-fit, smallest-adequate first — Algorithm
+        1's ``fitSz``):
+          1. the single node with the fewest idle devices that fits
+             everything;
+          2. else the smallest memory class whose total idle covers the job
+             (keeps synchronous data parallelism on homogeneous devices);
+          3. else greedy spill across classes, largest remainder first.
+        """
+        req = plan.n_devices
+        buckets = [b for b in self._by_type.get(plan.device_type, ())
+                   if b.mem >= plan.min_mem]
+        if sum(b.idle_sum for b in buckets) < req:
+            return None
+        # 1) single-node best fit: smallest adequate memory class, then
+        #    fewest idle devices, then first-added node
+        for bucket in buckets:
+            entries = bucket.entries
+            # entries[:cut] have idle >= req (sorted by -idle)
+            cut = bisect_left(entries, (-req + 1,))
+            if cut:
+                tightest = -entries[cut - 1][0]        # min idle >= req
+                first = bisect_left(entries, (-tightest,))
+                return ((entries[first][2], req),)
+        # 2) smallest homogeneous memory class that covers the job
+        alloc: List[Tuple[str, int]] = []
+        for bucket in buckets:
+            if bucket.idle_sum >= req:
+                for neg_idle, _, node_id in bucket.entries:
+                    take = min(-neg_idle, req)
+                    alloc.append((node_id, take))
+                    req -= take
+                    if req == 0:
+                        return tuple(alloc)
+        # 3) greedy spill across classes (largest remainder, then smallest
+        #    memory, then first-added — the seed's stable (-idle, mem) sort)
+        merged = heapq.merge(*[[(neg, b.mem, pos, nid)
+                                for neg, pos, nid in b.entries]
+                               for b in buckets])
+        for neg_idle, _, _, node_id in merged:
+            take = min(-neg_idle, req)
+            alloc.append((node_id, take))
+            req -= take
+            if req == 0:
+                return tuple(alloc)
+        return None                                     # unreachable: avail held
+
+    def schedule(self, plans: Sequence[ResourcePlan]) -> Optional[Allocation]:
+        """Full HAS against the pool: plan retrieval + placement (no mutation;
+        call ``apply`` with the returned placements to commit)."""
+        plan = self.select_plan(plans)
+        if plan is None:
+            return None
+        placements = self.find_placements(plan)
+        if placements is None:
+            return None
+        return Allocation(plan=plan, placements=placements)
+
+
+# ------------------------------------------------------------------------- #
+# Sequence-of-nodes convenience API (orchestrator, tests).  These build a
+# throwaway index; long-lived callers should hold a ClusterPool instead.
 
 def select_plan(plans: Sequence[ResourcePlan],
                 nodes: Sequence[Node]) -> Optional[ResourcePlan]:
     """Stage 1 (Algorithm 1, lines 1-10)."""
-    for plan in plans:
-        avail = sum(n.idle for n in nodes if _eligible(plan, n))
-        if avail >= plan.n_devices:
-            return plan
-    return None
+    return ClusterPool(nodes).select_plan(plans)
 
 
 def place(plan: ResourcePlan, nodes: Sequence[Node]) -> Optional[Allocation]:
-    """Stage 2 (Algorithm 1, lines 11-37).  Mutates nothing; returns the
-    placement list or None if resources vanished.
-
-    Placement preference (best-fit, smallest-adequate first — Algorithm 1's
-    ``fitSz``):
-      1. the single node with the fewest idle devices that fits everything;
-      2. else the smallest memory class whose total idle covers the job
-         (keeps synchronous data parallelism on homogeneous devices);
-      3. else greedy spill across classes, largest remainder first.
-    """
-    idle: Dict[str, int] = {n.node_id: n.idle for n in nodes}
-    req = plan.n_devices
-    alloc: List[Tuple[str, int]] = []
-    cand = [n for n in nodes if _eligible(plan, n) and idle[n.node_id] > 0]
-    if sum(idle[n.node_id] for n in cand) < req:
+    """Stage 2 (Algorithm 1, lines 11-37) on a node sequence."""
+    placements = ClusterPool(nodes).find_placements(plan)
+    if placements is None:
         return None
-    # 1) single-node best fit: smallest adequate memory, then fewest idle
-    single = [n for n in cand if idle[n.node_id] >= req]
-    if single:
-        best = min(single, key=lambda n: (n.mem, idle[n.node_id]))
-        return Allocation(plan=plan, placements=((best.node_id, req),))
-    # 2) smallest homogeneous memory class that covers the job
-    for mem in sorted({n.mem for n in cand}):
-        group = [n for n in cand if n.mem == mem]
-        if sum(idle[n.node_id] for n in group) >= req:
-            group.sort(key=lambda n: -idle[n.node_id])        # densest first
-            for n in group:
-                take = min(idle[n.node_id], req)
-                alloc.append((n.node_id, take))
-                req -= take
-                if req == 0:
-                    return Allocation(plan=plan, placements=tuple(alloc))
-    # 3) greedy spill across classes (largest remainder first)
-    for n in sorted(cand, key=lambda x: (-idle[x.node_id], x.mem)):
-        if req == 0:
-            break
-        take = min(idle[n.node_id], req)
-        alloc.append((n.node_id, take))
-        req -= take
-    if req > 0:
-        return None
-    return Allocation(plan=plan, placements=tuple(alloc))
+    return Allocation(plan=plan, placements=placements)
 
 
 def schedule(plans: Sequence[ResourcePlan],
              nodes: Sequence[Node]) -> Optional[Allocation]:
     """Full HAS: plan retrieval + placement."""
-    plan = select_plan(plans, nodes)
-    if plan is None:
-        return None
-    return place(plan, nodes)
+    return ClusterPool(nodes).schedule(plans)

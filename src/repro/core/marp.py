@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from functools import lru_cache
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core import memory_model as mm
@@ -71,12 +72,13 @@ def plan_throughput_score(cfg: ModelConfig, dev: DeviceType, d: int, t: int,
     return total / flops_per_sample / ((d * t) ** 0.9)
 
 
+@lru_cache(maxsize=4096)
 def _active_analytic(cfg: ModelConfig) -> int:
     total = mm.analytic_param_count(cfg)
     if not cfg.num_experts:
         return total
     nm = 3 if cfg.mlp_variant == "swiglu" else 2
-    n_moe = sum(1 for l in range(cfg.num_layers) if cfg.layer_is_moe(l))
+    n_moe = mm.moe_layer_count(cfg)
     per_e = cfg.d_model * cfg.moe_d_ff * nm
     return total - n_moe * per_e * (cfg.num_experts - cfg.top_k)
 
@@ -91,8 +93,38 @@ def predict_plans(cfg: ModelConfig, global_batch: int, seq: int, *,
 
     mode='paper' uses the paper's GPT formulas verbatim; mode='exact' uses the
     generalised per-family model (DESIGN.md §4).
+
+    The sweep is memoized on ``(cfg, batch, seq, device_types, zero, mode,
+    max_devices, max_t)`` — trace workloads draw from a handful of model
+    configs, so in the scheduling hot path this is almost always a cache hit.
+    ``ResourcePlan`` is frozen, so cached plans are shared safely; the list
+    itself is fresh per call so callers may sort/slice it.
     """
-    device_types = list(device_types or DEVICE_TYPES)
+    dts = tuple(device_types) if device_types else tuple(DEVICE_TYPES)
+    return list(_predict_plans_cached(cfg, global_batch, seq, dts,
+                                      max_devices, zero, mode, max_t))
+
+
+def predict_plans_shared(cfg: ModelConfig, global_batch: int, seq: int, *,
+                         device_types: Optional[Sequence[str]] = None,
+                         max_devices: int = 512,
+                         zero: int = 1,
+                         mode: str = "exact",
+                         max_t: int = 64) -> Tuple[ResourcePlan, ...]:
+    """``predict_plans`` returning the memoized tuple itself (immutable, so
+    sharing is safe).  Identical inputs yield the *same object*, which lets
+    schedulers dedupe repeated no-fit checks across jobs by plan-list
+    identity — the workload-generation path for the simulator uses this."""
+    dts = tuple(device_types) if device_types else tuple(DEVICE_TYPES)
+    return _predict_plans_cached(cfg, global_batch, seq, dts,
+                                 max_devices, zero, mode, max_t)
+
+
+@lru_cache(maxsize=4096)
+def _predict_plans_cached(cfg: ModelConfig, global_batch: int, seq: int,
+                          device_types: Tuple[str, ...], max_devices: int,
+                          zero: int, mode: str, max_t: int
+                          ) -> Tuple[ResourcePlan, ...]:
     plans: List[ResourcePlan] = []
     d_candidates = [x for x in _pow2_divisors(global_batch) if x <= max_devices]
     for dt_name in device_types:
@@ -116,7 +148,7 @@ def predict_plans(cfg: ModelConfig, global_batch: int, seq: int, *,
                     break          # larger t only wastes devices for this d
                 t *= 2
     plans.sort(key=lambda p: (-p.score, p.n_devices, p.t))
-    return plans
+    return tuple(plans)
 
 
 def _pow2_divisors(n: int) -> List[int]:
@@ -148,7 +180,6 @@ def predict_serve_plans(cfg: ModelConfig, batch: int, cache_len: int, *,
     HBM-bound: rate ~ aggregate HBM bandwidth / bytes touched per token)."""
     device_types = list(device_types or DEVICE_TYPES)
     plans: List[ResourcePlan] = []
-    W = mm.analytic_param_count(cfg)
     d_candidates = [x for x in _pow2_divisors(batch) if x <= max_devices]
     for dt_name in device_types:
         dev = DEVICE_TYPES[dt_name]
@@ -156,11 +187,16 @@ def predict_serve_plans(cfg: ModelConfig, batch: int, cache_len: int, *,
         for d in d_candidates:
             t = 1
             while t <= max_t and d * t <= max_devices:
-                pred = mm.serve_peak_bytes(cfg, batch, cache_len, d, t)
+                wbytes, cache, work = mm.serve_bytes_split(cfg, batch,
+                                                           cache_len, d, t)
+                pred = wbytes + cache + work
                 if pred < cap:
-                    # per-token bytes: weights (2W/t per group) + cache slice
-                    bytes_per_tok = 2.0 * W / t + pred - 2.0 * W / t
-                    rate = dev.hbm_bw * d * t / max(bytes_per_tok, 1.0) \
+                    # each decode step streams the weight slice (2W/t) once
+                    # per device plus that device's KV/SSM cache slice, and
+                    # the d*t devices jointly emit ``batch`` tokens — so
+                    # tokens/s ~ batch * HBM bw / (weight slice + cache slice)
+                    step_bytes = wbytes + cache
+                    rate = batch * dev.hbm_bw / max(step_bytes, 1.0) \
                         * _tp_efficiency(t, dev)
                     plans.append(ResourcePlan(
                         n_devices=d * t, min_mem=int(pred / MEM_SAFETY) + 1,

@@ -17,9 +17,41 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from functools import lru_cache
 
 from repro.configs.base import ModelConfig
 from repro.models.moe import moe_capacity
+
+# Control-plane hot path: every function below is called per (d, t) candidate
+# by MARP's plan sweep, which itself runs per queued job per scheduler event.
+# All pure functions of hashable args are memoized (ModelConfig is a frozen
+# dataclass), and the per-layer Python loops are collapsed into
+# layer-kind-aggregated closed forms: a block's layers take one of at most
+# four shapes — (attn|ssm) x (moe|dense) — so we compute each distinct shape
+# once and weight by its count instead of looping over ``num_layers``.
+
+
+@lru_cache(maxsize=4096)
+def layer_kind_counts(cfg: ModelConfig) -> tuple:
+    """(n_ssm, n_attn) layer counts — closed form of ``cfg.layer_kind``."""
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        return L, 0
+    if cfg.attn_layer_period:
+        p, o = cfg.attn_layer_period, cfg.attn_layer_offset
+        # l % p == o has solutions below L only when o < p and o < L
+        n_attn = (L - 1 - o) // p + 1 if o < p and o < L else 0
+        return L - n_attn, n_attn
+    return 0, L
+
+
+@lru_cache(maxsize=4096)
+def moe_layer_count(cfg: ModelConfig) -> int:
+    """#layers with ``cfg.layer_is_moe`` — closed form."""
+    if not cfg.num_experts:
+        return 0
+    L, p, o = cfg.num_layers, cfg.moe_layer_period, cfg.moe_layer_offset
+    return (L - 1 - o) // p + 1 if o < p and o < L else 0
 
 # ------------------------------------------------------------ paper mode ----
 
@@ -50,46 +82,53 @@ def paper_peak_bytes(cfg: ModelConfig, global_batch: int, seq: int,
 
 # ------------------------------------------------------------ exact mode ----
 
+@lru_cache(maxsize=4096)
 def analytic_param_count(cfg: ModelConfig) -> int:
-    """Mirror of repro.models.init_params — validated in tests."""
+    """Mirror of repro.models.init_params — validated in tests.
+
+    Closed form over layer kinds (integer arithmetic, so aggregating by
+    count is exactly equal to the per-layer sum it replaces).
+    """
     d, V, L = cfg.d_model, cfg.vocab_size, cfg.num_layers
     total = V * d                                      # embed
     if not cfg.tie_embeddings:
         total += d * V                                 # lm_head
     total += d                                         # final_norm
     nm = 3 if cfg.mlp_variant == "swiglu" else 2
-    for l in range(L):
-        kind = cfg.layer_kind(l)
-        total += d                                     # norm1
-        if kind == "ssm":
-            di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
-            ch = di + 2 * n
-            total += (d * (2 * di + 2 * n + h)         # in_proj
-                      + cfg.ssm_conv * ch + ch         # conv w+b
-                      + 3 * h                          # A_log, D, dt_bias
-                      + di                             # gated norm
-                      + di * d)                        # out_proj
-        elif cfg.attention == "mla":
+    n_ssm, n_attn = layer_kind_counts(cfg)
+    n_moe = moe_layer_count(cfg)
+    total += L * d                                     # norm1, every layer
+    if n_ssm:
+        di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+        ch = di + 2 * n
+        total += n_ssm * (d * (2 * di + 2 * n + h)     # in_proj
+                          + cfg.ssm_conv * ch + ch     # conv w+b
+                          + 3 * h                      # A_log, D, dt_bias
+                          + di                         # gated norm
+                          + di * d)                    # out_proj
+    if n_attn:
+        if cfg.attention == "mla":
             rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
             dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
             H = cfg.num_heads
-            total += (d * rq + rq + rq * H * (dn + dr)
-                      + d * (rkv + dr) + rkv
-                      + rkv * H * dn + rkv * H * dv
-                      + H * dv * d)
+            total += n_attn * (d * rq + rq + rq * H * (dn + dr)
+                               + d * (rkv + dr) + rkv
+                               + rkv * H * dn + rkv * H * dv
+                               + H * dv * d)
         else:
             H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-            total += d * H * hd + 2 * d * K * hd + H * hd * d
-        has_ffn = cfg.layer_is_moe(l) or cfg.d_ff > 0
-        if has_ffn:
-            total += d                                 # norm2
-            if cfg.layer_is_moe(l):
-                E, f = cfg.num_experts, cfg.moe_d_ff
-                total += d * E + E * d * f * nm
-                if cfg.num_shared_experts:
-                    total += d * (cfg.num_shared_experts * f) * nm
-            else:
-                total += d * cfg.d_ff * nm
+            total += n_attn * (d * H * hd + 2 * d * K * hd + H * hd * d)
+    # feed-forward: moe layers always carry an FFN; dense layers only when
+    # d_ff > 0 (each FFN layer also carries norm2)
+    n_dense_ffn = (L - n_moe) if cfg.d_ff > 0 else 0
+    total += (n_moe + n_dense_ffn) * d                 # norm2
+    if n_moe:
+        E, f = cfg.num_experts, cfg.moe_d_ff
+        per_moe = d * E + E * d * f * nm
+        if cfg.num_shared_experts:
+            per_moe += d * (cfg.num_shared_experts * f) * nm
+        total += n_moe * per_moe
+    total += n_dense_ffn * d * cfg.d_ff * nm
     return total
 
 
@@ -117,13 +156,23 @@ def static_bytes(cfg: ModelConfig, t: int, d: int, zero: int = 1) -> float:
     return p_params + p_grads + p_opt + p_update
 
 
+@lru_cache(maxsize=8192)
 def _block_working_bytes(cfg: ModelConfig, s: int, mb: int, t: int,
                          q_chunk: int = 2048) -> float:
-    """Peak transient bytes while (re)computing one layer block."""
+    """Peak transient bytes while (re)computing one layer block.
+
+    A layer's working set depends only on (kind, is_moe), so the per-layer
+    loop collapses to at most four distinct evaluations; the max over the
+    block equals the max over distinct shapes (bit-identical to the seed
+    per-layer scan).
+    """
     d = cfg.d_model
-    per_layer = []
+    per_layer = {}
     for j in range(cfg.block_period):
         kind = cfg.layer_kind(j)
+        shape_key = (kind, cfg.layer_is_moe(j))
+        if shape_key in per_layer:
+            continue
         if kind == "ssm":
             di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
             L = min(128, s)
@@ -157,11 +206,12 @@ def _block_working_bytes(cfg: ModelConfig, s: int, mb: int, t: int,
                 b += T * cfg.num_shared_experts * f * 2 * 2 / t
         elif cfg.d_ff:
             b += mb * s * cfg.d_ff * 2 * 2 / t                # h (+gate)
-        per_layer.append(b)
+        per_layer[shape_key] = b
     # backward of one block keeps ~fwd working set + grads of it
-    return 2.0 * max(per_layer)
+    return 2.0 * max(per_layer.values())
 
 
+@lru_cache(maxsize=8192)
 def activation_bytes(cfg: ModelConfig, s: int, mb: int, t: int,
                      remat: str = "block") -> float:
     """Activation bytes per device for micro-batch ``mb`` and sequence ``s``."""
@@ -169,13 +219,16 @@ def activation_bytes(cfg: ModelConfig, s: int, mb: int, t: int,
     nb = L // cfg.block_period
     logits = mb * s * (V / t) * (2 + 4 + 4)            # bf16 logits + fp32 lse/grad
     x_io = 4 * mb * s * d * 2                          # embeds + residual copies
+    wb = _block_working_bytes(cfg, s, mb, t)
     if remat == "block":
         stored = nb * mb * s * d * 2 * cfg.block_period  # per-sublayer carry inputs
-        return stored + _block_working_bytes(cfg, s, mb, t) + logits + x_io
-    # no remat: everything live (paper-style accounting, generalised)
+        return stored + wb + logits + x_io
+    # no remat: everything live (paper-style accounting, generalised).
+    # Repeated addition (not multiplication) keeps the float result
+    # bit-identical to the seed per-layer accumulation.
     total = 0.0
-    for j in range(cfg.block_period):
-        total += _block_working_bytes(cfg, s, mb, t) / 2.0 + mb * s * d * 2 * 2
+    for _ in range(cfg.block_period):
+        total += wb / 2.0 + mb * s * d * 2 * 2
     return total * nb + logits + x_io
 
 
@@ -185,6 +238,7 @@ def activation_bytes(cfg: ModelConfig, s: int, mb: int, t: int,
 XLA_RUNTIME_OVERHEAD = int(0.8 * 1024 ** 3)
 
 
+@lru_cache(maxsize=8192)
 def exact_peak_bytes(cfg: ModelConfig, global_batch: int, seq: int,
                      d: int, t: int, *, zero: int = 1, microbatch: int = 0,
                      remat: str = "block") -> float:
@@ -199,24 +253,34 @@ def exact_peak_bytes(cfg: ModelConfig, global_batch: int, seq: int,
 
 # ----------------------------------------------------------- serve mode -----
 
+@lru_cache(maxsize=8192)
+def serve_bytes_split(cfg: ModelConfig, batch: int, cache_len: int,
+                      d: int, t: int, *, zero: int = 0) -> tuple:
+    """(weight, cache, workspace) bytes/device for decode — the components
+    of ``serve_peak_bytes``, exposed so serve-plan ranking can charge the
+    weight stream and the cache slice separately."""
+    W = analytic_param_count(cfg)
+    wbytes = 2.0 * W / (t * d if zero >= 3 else t)
+    n_ssm, n_attn = layer_kind_counts(cfg)
+    cache = 0.0
+    if n_ssm:
+        ch = cfg.d_inner + 2 * cfg.ssm_state
+        cache += n_ssm * batch * ((cfg.ssm_conv - 1) * ch * 2
+                                  + cfg.n_ssm_heads * cfg.ssm_head_dim
+                                  * cfg.ssm_state * 4) / t
+    if n_attn:
+        if cfg.attention == "mla":
+            cache += n_attn * batch * cache_len * (cfg.kv_lora_rank
+                                                   + cfg.qk_rope_head_dim) * 2 / d
+        else:
+            S = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+            cache += n_attn * batch * S * 2 * cfg.num_kv_heads \
+                * cfg.head_dim * 2 / (d * t)
+    work = batch * cfg.d_model * 64 * 2                # decode workspace (small)
+    return wbytes, cache, work
+
+
 def serve_peak_bytes(cfg: ModelConfig, batch: int, cache_len: int,
                      d: int, t: int, *, zero: int = 0) -> float:
     """Peak bytes/device for decode: bf16 weights + KV/SSM cache + workspace."""
-    W = analytic_param_count(cfg)
-    wbytes = 2.0 * W / (t * d if zero >= 3 else t)
-    cache = 0.0
-    for l in range(cfg.num_layers):
-        kind = cfg.layer_kind(l)
-        if kind == "ssm":
-            ch = cfg.d_inner + 2 * cfg.ssm_state
-            cache += batch * ((cfg.ssm_conv - 1) * ch * 2
-                              + cfg.n_ssm_heads * cfg.ssm_head_dim
-                              * cfg.ssm_state * 4) / t
-        elif cfg.attention == "mla":
-            cache += batch * cache_len * (cfg.kv_lora_rank
-                                          + cfg.qk_rope_head_dim) * 2 / d
-        else:
-            S = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
-            cache += batch * S * 2 * cfg.num_kv_heads * cfg.head_dim * 2 / (d * t)
-    work = batch * cfg.d_model * 64 * 2                # decode workspace (small)
-    return wbytes + cache + work
+    return sum(serve_bytes_split(cfg, batch, cache_len, d, t, zero=zero))

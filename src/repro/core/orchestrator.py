@@ -7,7 +7,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.devices import DEVICE_TYPES
-from repro.core.has import Allocation, Node, schedule
+from repro.core.has import Allocation, ClusterPool, Node
 from repro.core.marp import ResourcePlan
 
 
@@ -20,16 +20,21 @@ class JobRecord:
 
 
 class Orchestrator:
-    """Owns cluster state; allocate/release are the only mutation points."""
+    """Owns cluster state; allocate/release are the only mutation points.
+
+    State lives in a long-lived ``ClusterPool``, so every HAS pass is an
+    indexed lookup rather than a cluster scan — allocation/release keep the
+    per-class idle counters in sync incrementally."""
 
     def __init__(self, nodes: Sequence[Node]):
-        self.nodes: Dict[str, Node] = {n.node_id: n for n in nodes}
+        self.pool = ClusterPool(nodes)
+        self.nodes: Dict[str, Node] = self.pool.nodes
         self.jobs: Dict[int, JobRecord] = {}
         self._ids = itertools.count()
 
     # ------------------------------------------------------------ state --
     def idle_devices(self) -> int:
-        return sum(n.idle for n in self.nodes.values())
+        return self.pool.total_idle
 
     def snapshot(self) -> List[Node]:
         return list(self.nodes.values())
@@ -44,13 +49,10 @@ class Orchestrator:
     def try_start(self, rec: JobRecord) -> bool:
         if rec.state != "queued":
             return False
-        alloc = schedule(rec.plans, self.snapshot())
+        alloc = self.pool.schedule(rec.plans)
         if alloc is None:
             return False
-        for node_id, k in alloc.placements:
-            node = self.nodes[node_id]
-            assert node.idle >= k, (node_id, node.idle, k)
-            node.idle -= k
+        self.pool.apply(alloc.placements)     # Node.take asserts capacity
         rec.allocation = alloc
         rec.state = "running"
         return True
@@ -59,8 +61,7 @@ class Orchestrator:
         rec = self.jobs[job_id]
         if rec.state != "running":
             return
-        for node_id, k in rec.allocation.placements:
-            self.nodes[node_id].idle += k
+        self.pool.release(rec.allocation.placements)
         rec.state = "done"
         # opportunistically start queued jobs (FIFO by id)
         for other in sorted(self.jobs.values(), key=lambda r: r.job_id):

@@ -1,0 +1,31 @@
+"""Optional-hypothesis shim.
+
+The container may not ship ``hypothesis``; importing it at module scope made
+three whole test modules fail collection, silencing dozens of plain tests.
+Importing ``given``/``settings``/``st`` from here instead degrades the
+property tests to skips when hypothesis is unavailable and is a strict
+pass-through when it is.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs any strategy-building expression at module import."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: self
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*a, **k):
+        return lambda fn: fn

@@ -1,0 +1,411 @@
+"""Golden-equivalence guards for the indexed control plane.
+
+The ClusterPool / memoized-MARP rewrite must be *behaviour-preserving*: the
+functions below are verbatim copies of the seed (pre-index) implementations,
+and every test asserts the optimized paths produce byte- and
+decision-identical results — placements, start/finish times, and predicted
+bytes — across random clusters and the seeded trace workloads.
+"""
+import copy
+import heapq
+import random
+
+import pytest
+
+from repro.cluster.schedulers import FrenzyScheduler
+from repro.cluster.simulator import SimJob, job_rate, simulate
+from repro.cluster.traces import helios_like, new_workload, philly_like
+from repro.configs.registry import ARCHS
+from repro.core import memory_model as mm
+from repro.core.devices import DEVICE_TYPES
+from repro.core.has import ClusterPool, Node, place, select_plan
+from repro.core.marp import ResourcePlan, predict_plans, _predict_plans_cached
+from repro.core.orchestrator import make_cluster, PAPER_SIM_CLUSTER
+
+GB = 1024 ** 3
+
+
+# --------------------------------------------------------------------------
+# seed reference: HAS Algorithm 1 (per-node scans, copied from the seed repo)
+
+def _seed_eligible(plan, n):
+    return n.device_type == plan.device_type and n.mem >= plan.min_mem
+
+
+def _seed_select_plan(plans, nodes):
+    for plan in plans:
+        avail = sum(n.idle for n in nodes if _seed_eligible(plan, n))
+        if avail >= plan.n_devices:
+            return plan
+    return None
+
+
+def _seed_place(plan, nodes):
+    idle = {n.node_id: n.idle for n in nodes}
+    req = plan.n_devices
+    alloc = []
+    cand = [n for n in nodes if _seed_eligible(plan, n) and idle[n.node_id] > 0]
+    if sum(idle[n.node_id] for n in cand) < req:
+        return None
+    single = [n for n in cand if idle[n.node_id] >= req]
+    if single:
+        best = min(single, key=lambda n: (n.mem, idle[n.node_id]))
+        return ((best.node_id, req),)
+    for mem in sorted({n.mem for n in cand}):
+        group = [n for n in cand if n.mem == mem]
+        if sum(idle[n.node_id] for n in group) >= req:
+            group.sort(key=lambda n: -idle[n.node_id])
+            for n in group:
+                take = min(idle[n.node_id], req)
+                alloc.append((n.node_id, take))
+                req -= take
+                if req == 0:
+                    return tuple(alloc)
+    for n in sorted(cand, key=lambda x: (-idle[x.node_id], x.mem)):
+        if req == 0:
+            break
+        take = min(idle[n.node_id], req)
+        alloc.append((n.node_id, take))
+        req -= take
+    if req > 0:
+        return None
+    return tuple(alloc)
+
+
+def _seed_frenzy_decisions(queued, nodes_by_id):
+    """Seed FrenzyScheduler.schedule: clone, scan, decrement."""
+    work = {k: copy.copy(v) for k, v in nodes_by_id.items()}
+    out = []
+    for job in sorted(queued, key=lambda j: (j.arrival, j.job_id)):
+        plan = _seed_select_plan(job.plans, list(work.values()))
+        if plan is None:
+            continue
+        placements = _seed_place(plan, list(work.values()))
+        if placements is None:
+            continue
+        for node_id, k in placements:
+            work[node_id].idle -= k
+        out.append((job, placements, plan.d, plan.t))
+    return out
+
+
+def _seed_simulate(jobs, nodes):
+    """Seed event loop: re-run the scheduler on every arrival and on every
+    finish with a non-empty queue (charge_overhead=False)."""
+    nodes_by_id = {n.node_id: n for n in nodes}
+    for n in nodes_by_id.values():
+        n.idle = n.total
+    events = []
+    for j in jobs:
+        heapq.heappush(events, (j.arrival, j.job_id, "arrive", j))
+    queued = []
+    seq = len(jobs)
+
+    def run_scheduler(now):
+        nonlocal seq
+        for job, placements, d, t in _seed_frenzy_decisions(queued, nodes_by_id):
+            for node_id, k in placements:
+                assert nodes_by_id[node_id].idle >= k
+                nodes_by_id[node_id].idle -= k
+            job.placements = placements
+            job.start_time = now
+            job.rate = job_rate(job, placements, nodes_by_id, d, t)
+            job.finish_time = now + job.total_samples / job.rate
+            queued.remove(job)
+            seq += 1
+            heapq.heappush(events, (job.finish_time, seq, "finish", job))
+
+    while events:
+        now, _, kind, job = heapq.heappop(events)
+        if kind == "arrive":
+            queued.append(job)
+            run_scheduler(now)
+        else:
+            for node_id, k in job.placements:
+                nodes_by_id[node_id].idle += k
+            if queued:
+                run_scheduler(now)
+    return jobs
+
+
+# --------------------------------------------------------------------------
+# seed reference: exact memory model (per-layer loops)
+
+def _seed_analytic_param_count(cfg):
+    d, V, L = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    total = V * d
+    if not cfg.tie_embeddings:
+        total += d * V
+    total += d
+    nm = 3 if cfg.mlp_variant == "swiglu" else 2
+    for l in range(L):
+        kind = cfg.layer_kind(l)
+        total += d
+        if kind == "ssm":
+            di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+            ch = di + 2 * n
+            total += (d * (2 * di + 2 * n + h) + cfg.ssm_conv * ch + ch
+                      + 3 * h + di + di * d)
+        elif cfg.attention == "mla":
+            rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+            dn, dr, dv = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                          cfg.v_head_dim)
+            H = cfg.num_heads
+            total += (d * rq + rq + rq * H * (dn + dr)
+                      + d * (rkv + dr) + rkv
+                      + rkv * H * dn + rkv * H * dv + H * dv * d)
+        else:
+            H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+            total += d * H * hd + 2 * d * K * hd + H * hd * d
+        has_ffn = cfg.layer_is_moe(l) or cfg.d_ff > 0
+        if has_ffn:
+            total += d
+            if cfg.layer_is_moe(l):
+                E, f = cfg.num_experts, cfg.moe_d_ff
+                total += d * E + E * d * f * nm
+                if cfg.num_shared_experts:
+                    total += d * (cfg.num_shared_experts * f) * nm
+            else:
+                total += d * cfg.d_ff * nm
+    return total
+
+
+def _seed_block_working_bytes(cfg, s, mb, t, q_chunk=2048):
+    from repro.models.moe import moe_capacity
+    d = cfg.d_model
+    per_layer = []
+    for j in range(cfg.block_period):
+        kind = cfg.layer_kind(j)
+        if kind == "ssm":
+            di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+            L = min(128, s)
+            nc = max(s // L, 1)
+            b = (mb * s * (2 * di + 2 * n + h) * 2 / t
+                 + mb * s * (di + 2 * n) * 2 / t
+                 + mb * nc * L * L * h * 4 / t
+                 + mb * nc * h * (di // h) * n * 4 / t
+                 + mb * s * di * 4 / t)
+        elif cfg.attention == "mla":
+            H = cfg.num_heads
+            dn, dr, dv = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                          cfg.v_head_dim)
+            qc = min(q_chunk, s)
+            b = (mb * s * H * (dn + dr) * 2 * 2 / t
+                 + mb * s * H * dv * 2 / t
+                 + mb * H * qc * qc * 4 / t
+                 + mb * s * (cfg.kv_lora_rank + dr) * 2)
+        else:
+            H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+            qc = min(q_chunk, s)
+            kv_span = min(s, (cfg.sliding_window or s) + qc)
+            b = (mb * s * (H + 2 * K) * hd * 2 / t
+                 + mb * H * qc * min(qc, kv_span) * 4 / t
+                 + mb * s * H * hd * 4 / t)
+        if cfg.layer_is_moe(j):
+            E, f = cfg.num_experts, cfg.moe_d_ff
+            T = mb * s
+            C = moe_capacity(T, E, cfg.top_k)
+            b += E * C * d * 2 / t + E * C * f * 2 * 2 / t
+            if cfg.num_shared_experts:
+                b += T * cfg.num_shared_experts * f * 2 * 2 / t
+        elif cfg.d_ff:
+            b += mb * s * cfg.d_ff * 2 * 2 / t
+        per_layer.append(b)
+    return 2.0 * max(per_layer)
+
+
+def _seed_activation_bytes(cfg, s, mb, t, remat="block"):
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    nb = L // cfg.block_period
+    logits = mb * s * (V / t) * (2 + 4 + 4)
+    x_io = 4 * mb * s * d * 2
+    if remat == "block":
+        stored = nb * mb * s * d * 2 * cfg.block_period
+        return stored + _seed_block_working_bytes(cfg, s, mb, t) + logits + x_io
+    total = 0.0
+    for j in range(cfg.block_period):
+        total += _seed_block_working_bytes(cfg, s, mb, t) / 2.0 + mb * s * d * 2 * 2
+    return total * nb + logits + x_io
+
+
+def _seed_static_bytes(cfg, t, d, zero=1):
+    W = _seed_analytic_param_count(cfg)
+    if zero >= 3:
+        p_params = 2.0 * W / (t * d)
+    else:
+        p_params = 2.0 * W / t
+    if zero >= 1:
+        p_grads = 2.0 * W / (t * d)
+        p_opt = 12.0 * W / (t * d)
+        p_update = 4.0 * W / (t * d)
+    else:
+        p_grads = 2.0 * W / t
+        p_opt = 12.0 * W / t
+        p_update = 4.0 * W / t
+    return p_params + p_grads + p_opt + p_update
+
+
+def _seed_exact_peak_bytes(cfg, global_batch, seq, d, t, zero=1):
+    shard_batch = max(global_batch // d, 1)
+    mb = max(min(min(shard_batch, 1), shard_batch), 1)
+    return (_seed_static_bytes(cfg, t, d, zero)
+            + _seed_activation_bytes(cfg, seq, mb, t, "block")
+            + mm.XLA_RUNTIME_OVERHEAD)
+
+
+# --------------------------------------------------------------------------
+# HAS golden tests
+
+def _random_cluster(rng, max_nodes=12):
+    nodes = []
+    for i in range(rng.randint(1, max_nodes)):
+        mem = rng.choice([16, 24, 40, 80]) * GB
+        tot = rng.randint(1, 8)
+        nodes.append(Node(f"n{i}", rng.choice(["X", "Y"]), mem, tot,
+                          rng.randint(0, tot)))
+    return nodes
+
+
+def _random_plan(rng, dtype):
+    return ResourcePlan(n_devices=rng.randint(1, 16),
+                        min_mem=rng.choice([8, 24, 40, 80]) * GB,
+                        d=1, t=1, device_type=dtype, pred_bytes=1.0, score=1.0)
+
+
+def test_place_decision_identical_to_seed():
+    rng = random.Random(0)
+    checked = 0
+    for _ in range(4000):
+        nodes = _random_cluster(rng)
+        plan = _random_plan(rng, rng.choice(["X", "Y"]))
+        want = _seed_place(plan, nodes)
+        got = place(plan, nodes)
+        assert (want is None) == (got is None)
+        if want is not None:
+            assert got.placements == want
+            checked += 1
+    assert checked > 500          # the fuzz actually exercised placements
+
+
+def test_select_plan_identical_to_seed():
+    rng = random.Random(1)
+    for _ in range(2000):
+        nodes = _random_cluster(rng)
+        plans = [_random_plan(rng, rng.choice(["X", "Y"]))
+                 for _ in range(rng.randint(1, 6))]
+        assert select_plan(plans, nodes) is _seed_select_plan(plans, nodes)
+
+
+def test_pool_incremental_index_consistent():
+    """Property: after arbitrary take/free sequences the pool's counters and
+    sorted entries match a brute-force recount."""
+    rng = random.Random(2)
+    nodes = _random_cluster(rng, max_nodes=20)
+    pool = ClusterPool(nodes)
+    for _ in range(3000):
+        n = pool.nodes[rng.choice(list(pool.nodes))]
+        if rng.random() < 0.5 and n.idle > 0:
+            pool.take(n.node_id, rng.randint(1, n.idle))
+        elif n.idle < n.total:
+            pool.free(n.node_id, rng.randint(1, n.total - n.idle))
+        plan = _random_plan(rng, rng.choice(["X", "Y"]))
+        brute = sum(x.idle for x in nodes
+                    if x.device_type == plan.device_type
+                    and x.mem >= plan.min_mem)
+        assert pool.avail(plan) == brute
+        assert pool.total_idle == sum(x.idle for x in nodes)
+
+
+def test_node_take_free_guard_rails():
+    n = Node("a", "X", 40 * GB, 4, 4)
+    n.take(3)
+    assert n.idle == 1
+    with pytest.raises(AssertionError):
+        n.take(2)                   # would drive idle negative
+    n.free(3)
+    assert n.idle == 4
+    with pytest.raises(AssertionError):
+        n.free(1)                   # would exceed total
+
+
+# --------------------------------------------------------------------------
+# full-trace golden tests: optimized simulator vs seed event loop
+
+@pytest.mark.parametrize("trace", ["new", "philly", "helios"])
+def test_frenzy_simulation_identical_to_seed(trace):
+    nodes = make_cluster(PAPER_SIM_CLUSTER)
+    types = sorted({n.device_type for n in nodes})
+    gen = {"new": new_workload, "philly": philly_like,
+           "helios": helios_like}[trace]
+    jobs = gen(30, types, seed=13)
+    want = _seed_simulate(copy.deepcopy(jobs), copy.deepcopy(nodes))
+    got = simulate(copy.deepcopy(jobs), copy.deepcopy(nodes),
+                   FrenzyScheduler(), charge_overhead=False).jobs
+    for w, g in zip(sorted(want, key=lambda j: j.job_id),
+                    sorted(got, key=lambda j: j.job_id)):
+        assert g.placements == w.placements, w.job_id
+        assert g.start_time == w.start_time, w.job_id
+        assert g.finish_time == w.finish_time, w.job_id
+        assert g.rate == w.rate, w.job_id
+
+
+# --------------------------------------------------------------------------
+# memory-model golden tests
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_exact_peak_bytes_identical_to_seed(arch):
+    cfg = ARCHS[arch]
+    for batch, seq in ((8, 512), (32, 1024), (256, 4096)):
+        for d in (1, 4):
+            for t in (1, 8):
+                for zero in (0, 1, 3):
+                    want = _seed_exact_peak_bytes(cfg, batch, seq, d, t, zero)
+                    got = mm.exact_peak_bytes(cfg, batch, seq, d, t, zero=zero)
+                    assert got == want, (arch, batch, seq, d, t, zero)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_analytic_param_count_identical_to_seed(arch):
+    cfg = ARCHS[arch]
+    assert mm.analytic_param_count(cfg) == _seed_analytic_param_count(cfg)
+
+
+def test_activation_bytes_none_remat_identical_to_seed():
+    for arch in ("gpt2-350m", "mixtral-8x22b", "mamba2-130m",
+                 "jamba-1.5-large-398b"):
+        cfg = ARCHS[arch]
+        assert mm.activation_bytes(cfg, 1024, 1, 4, remat="none") == \
+            _seed_activation_bytes(cfg, 1024, 1, 4, remat="none")
+
+
+# --------------------------------------------------------------------------
+# plan-cache behaviour
+
+def test_predict_plans_cache_hit_and_isolation():
+    cfg = ARCHS["gpt2-350m"]
+    _predict_plans_cached.cache_clear()
+    p1 = predict_plans(cfg, 32, 1024, device_types=["A100-40G"])
+    before = _predict_plans_cached.cache_info().hits
+    p2 = predict_plans(cfg, 32, 1024, device_types=["A100-40G"])
+    assert _predict_plans_cached.cache_info().hits == before + 1
+    assert p1 == p2 and p1 is not p2      # fresh list per call
+    p1.clear()                            # caller mutation must not leak
+    assert predict_plans(cfg, 32, 1024, device_types=["A100-40G"]) == p2
+
+
+def test_predict_plans_cache_key_invalidation():
+    """Every key component must reach the cache key: changing it changes
+    the result (or at least misses the cache)."""
+    cfg = ARCHS["gpt2-350m"]
+    base = predict_plans(cfg, 32, 1024, device_types=["A100-40G"])
+    assert predict_plans(cfg, 64, 1024, device_types=["A100-40G"]) != base
+    assert predict_plans(cfg, 32, 2048, device_types=["A100-40G"]) != base
+    assert predict_plans(cfg, 32, 1024, device_types=["A100-80G"]) != base
+    assert predict_plans(ARCHS["gpt2-7b"], 32, 1024,
+                         device_types=["A100-40G"]) != base
+    z3 = predict_plans(cfg, 32, 1024, device_types=["A100-40G"], zero=3)
+    assert z3 != base                     # zero level reaches the key
+    assert predict_plans(cfg, 32, 1024, device_types=["A100-40G"],
+                         mode="paper") != base
+    assert predict_plans(cfg, 32, 1024, device_types=["A100-40G"],
+                         max_devices=4) != base

@@ -1,0 +1,44 @@
+"""Control-plane performance smoke guards (CI-sized).
+
+These bounds are deliberately generous — an order of magnitude above what
+the indexed ClusterPool + memoized MARP achieve on a cold laptop — so they
+only trip on real regressions (e.g. an O(nodes) scan creeping back into the
+scheduler hot path), not on machine noise.
+"""
+import copy
+import time
+
+from benchmarks.sched_scale import make_scaled_cluster as _scaled_cluster
+from repro.cluster.schedulers import FrenzyScheduler
+from repro.cluster.simulator import simulate
+from repro.cluster.traces import scale_workload
+
+
+def test_simulate_1k_jobs_on_1k_nodes_fast():
+    """1k synthetic jobs on a 1k-node cluster must simulate end-to-end well
+    under a minute (it runs in well under a second on the indexed pool)."""
+    nodes = _scaled_cluster(1000)
+    types = sorted({n.device_type for n in nodes})
+    jobs = scale_workload(1000, types, seed=23)
+    t0 = time.perf_counter()
+    res = simulate(jobs, nodes, FrenzyScheduler(), charge_overhead=False)
+    wall = time.perf_counter() - t0
+    assert len(res.jobs) == 1000
+    assert all(j.finish_time > 0 for j in res.jobs)
+    assert wall < 30.0, f"scheduling regression: 1k x 1k took {wall:.1f}s"
+
+
+def test_scheduler_overhead_does_not_scale_with_nodes():
+    """Per-call scheduler time must not scale with node count.  The indexed
+    pool runs ~5 us/call at 2000 nodes; the seed's per-node scans ran ~1 ms.
+    An absolute bound with ~100x headroom (rather than a cross-run timing
+    ratio) keeps this robust on noisy CI machines."""
+    nodes = _scaled_cluster(2000)
+    types = sorted({n.device_type for n in nodes})
+    jobs = scale_workload(200, types, seed=29)
+    best = float("inf")
+    for _ in range(3):
+        res = simulate(copy.deepcopy(jobs), _scaled_cluster(2000),
+                       FrenzyScheduler(), charge_overhead=False)
+        best = min(best, res.sched_time_s / res.sched_calls)
+    assert best < 500e-6, f"scheduler call scales with cluster: {best*1e6:.0f}us"
