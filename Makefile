@@ -1,0 +1,23 @@
+# Builders and CI run the same commands (ISSUE 2 satellite).
+#
+#   make tier1        fast test suite (the driver's tier-1 gate)
+#   make tier1-fast   tier1 minus tests marked `slow`
+#   make bench-smoke  benchmark grid, slow corners trimmed
+#   make bench        full benchmark grid (tens of seconds)
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: tier1 tier1-fast bench-smoke bench
+
+tier1:
+	$(PY) -m pytest -x -q
+
+tier1-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench-smoke:
+	$(PY) -m benchmarks.run --skip-slow
+
+bench:
+	$(PY) -m benchmarks.run

@@ -17,14 +17,16 @@ def main() -> None:
                     help="skip the memcheck subprocess (XLA compiles)")
     args = ap.parse_args()
 
-    from benchmarks import (jct_newworkload, jct_traces, kernels,
-                            memory_accuracy, roofline, sched_overhead,
-                            sched_scale)
+    from benchmarks import (elastic_churn, jct_newworkload, jct_traces,
+                            kernels, memory_accuracy, roofline,
+                            sched_overhead, sched_scale)
     suites = [
         ("sched_overhead", sched_overhead.run),        # Fig 5a
         # --skip-slow trims the scale grid to its small corner (the full
         # 10k-node x 5k-job grid takes tens of seconds)
         ("sched_scale", lambda: sched_scale.run(quick=args.skip_slow)),
+        # elastic reallocation vs static under node churn (lifecycle engine)
+        ("elastic_churn", lambda: elastic_churn.run(quick=args.skip_slow)),
         ("jct_new", jct_newworkload.run),              # Fig 4
         ("jct_traces", jct_traces.run),                # Fig 5b
         ("roofline", roofline.run),                    # deliverable g

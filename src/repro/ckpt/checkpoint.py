@@ -3,25 +3,49 @@
 On a real multi-pod deployment this would be an async, per-shard writer;
 the interface (save / restore / latest_step) is what the train loop codes
 against, and the npz backend is sufficient for CPU-scale runs and tests.
+
+This module also prices checkpoint traffic for the control plane:
+``state_bytes``/``migration_seconds`` give the serialized training-state
+size of a model and the save+restore cost of moving a job between
+placements — the lifecycle engine charges elastic migrations and
+preemption restarts with it.  jax/numpy are imported lazily so the
+scheduler hot path can import these estimates without touching device
+state.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+#: Per-parameter bytes in a serialized training checkpoint: the npz backend
+#: widens bf16 params to fp32 (4) and stores both Adam moments in fp32 (8).
+CKPT_BYTES_PER_PARAM = 12
+
+
+def state_bytes(cfg) -> int:
+    """Serialized training-state size (params + optimizer moments) of a
+    model config — what one checkpoint save/restore actually moves."""
+    from repro.core.memory_model import analytic_param_count
+    return int(analytic_param_count(cfg)) * CKPT_BYTES_PER_PARAM
+
+
+def migration_seconds(cfg, bandwidth: float = 16 * 2 ** 30) -> float:
+    """Checkpoint-restore migration cost: save the state at the old
+    placement plus restore it at the new one, at ``bandwidth`` bytes/s."""
+    return 2.0 * state_bytes(cfg) / float(bandwidth)
 
 
 def _flatten(tree: Any):
+    import jax
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
 
 
 def save(path: str, step: int, tree: Any) -> str:
+    import jax.numpy as jnp
+    import numpy as np
     os.makedirs(path, exist_ok=True)
     leaves, treedef = _flatten(tree)
     fname = os.path.join(path, f"ckpt_{step:08d}.npz")
@@ -51,6 +75,9 @@ def latest_step(path: str) -> Optional[int]:
 
 
 def restore(path: str, step: int, like: Any) -> Any:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
     fname = os.path.join(path, f"ckpt_{step:08d}.npz")
     data = np.load(fname)
     leaves, treedef = _flatten(like)

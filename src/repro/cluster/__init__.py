@@ -1,4 +1,8 @@
-from repro.cluster.simulator import SimJob, SimResult, simulate  # noqa: F401
-from repro.cluster.schedulers import (  # noqa: F401
-    FrenzyScheduler, OpportunisticScheduler, SiaScheduler,
+from repro.cluster.simulator import (  # noqa: F401
+    ClusterEvent, Job, LifecycleEngine, SimJob, SimResult, simulate,
 )
+from repro.cluster.schedulers import (  # noqa: F401
+    ElasticFlowScheduler, FrenzyScheduler, OpportunisticScheduler,
+    SiaScheduler,
+)
+from repro.cluster.traces import churn_schedule, spot_schedule  # noqa: F401

@@ -2,83 +2,41 @@
 and Opportunistic/FCFS (Lyra-style) baseline (paper §V-A-c).
 
 Scheduler state contract: ``schedule(queued, state)`` accepts either the
-simulator's long-lived ``ClusterPool`` (the fast path — incrementally
-indexed, shared with the event loop) or a plain ``{node_id: Node}`` dict
-(legacy callers, e.g. the overhead benchmark).  A scheduler that sets
-``applies_to_pool = True`` commits its placements to a shared pool itself,
-so the caller must not re-apply them; with a dict it works on a private
-snapshot and the caller applies the returned decisions, exactly like the
-seed ``_clone_nodes`` protocol.
+lifecycle engine's long-lived ``ClusterPool`` (the fast path —
+incrementally indexed, shared with the event loop) or a plain
+``{node_id: Node}`` dict (legacy callers, e.g. the overhead benchmark).  A
+scheduler that sets ``applies_to_pool = True`` commits its placements to a
+shared pool itself, so the caller must not re-apply them; with a dict it
+works on a private snapshot and the caller applies the returned decisions,
+exactly like the seed ``_clone_nodes`` protocol.
+
+Queue order is ``lifecycle.fifo_order`` for every scheduler here: FIFO by
+(arrival, id), except jobs preempted by node departures go first, least
+remaining work ahead — churn must not starve nearly-finished work.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.devices import DEVICE_TYPES
-from repro.core.has import ClusterPool, Node
+from repro.core.lifecycle import (HASAdmission, fifo_order, nodes_map,
+                                  snapshot_nodes)
 from repro.core.marp import (_active_analytic, _dp_efficiency,
                              _tp_efficiency)
-from repro.cluster.simulator import Scheduler, SimJob, job_rate
+from repro.cluster.simulator import Scheduler, SimJob, job_rate  # noqa: F401
 
-ClusterState = Union[ClusterPool, Dict[str, Node]]
-
-
-def _nodes_map(state: ClusterState) -> Dict[str, Node]:
-    return state.nodes if isinstance(state, ClusterPool) else state
-
-
-def _snapshot_nodes(state: ClusterState) -> Dict[str, Node]:
-    """Private mutable copies, seed ``_clone_nodes`` semantics."""
-    return {k: Node(v.node_id, v.device_type, v.mem, v.total, v.idle)
-            for k, v in _nodes_map(state).items()}
+# Back-compat aliases (pre-lifecycle module layout).
+_nodes_map = nodes_map
+_snapshot_nodes = snapshot_nodes
+_fifo = fifo_order
 
 
-def _fifo(queued: Sequence[SimJob]) -> List[SimJob]:
-    return sorted(queued, key=lambda j: (j.arrival, j.job_id))
-
-
-class FrenzyScheduler(Scheduler):
-    """MARP's ranked plans + HAS best-fit placement, FIFO order.
-
-    Runs directly against the indexed ``ClusterPool``: plan retrieval is a
-    per-plan counter lookup and placement touches only the entries it
-    selects, so a pass is O(queue x plans) instead of O(queue x plans x
-    nodes).  Placements are committed to a shared pool as jobs are admitted
-    (``applies_to_pool``) — a rejected job mutates nothing, so there is no
-    rollback path.
-    """
+class FrenzyScheduler(HASAdmission):
+    """MARP's ranked plans + HAS best-fit placement, FIFO order — the
+    paper-named face of the shared ``lifecycle.HASAdmission`` policy (one
+    admission implementation for simulator, orchestrator, and serverless
+    submission; see that class for the indexing/no-rollback details)."""
     name = "frenzy"
-    applies_to_pool = True
-
-    def schedule(self, queued, state):
-        if isinstance(state, ClusterPool):
-            pool = state
-        else:
-            pool = ClusterPool(_snapshot_nodes(state).values())
-        select_plan = pool.select_plan
-        find_placements = pool.find_placements
-        out = []
-        # Identical plan lists are shared objects (predict_plans_shared), and
-        # within one pass capacity only shrinks (admissions take, nothing
-        # frees) — so a plan list that found no feasible plan stays
-        # infeasible for the rest of the pass.  Dedupe those no-fit walks by
-        # object identity.
-        no_fit = set()
-        for job in _fifo(queued):
-            plans_key = id(job.plans)
-            if plans_key in no_fit:
-                continue                    # backfill: later jobs may fit
-            plan = select_plan(job.plans)
-            if plan is None:
-                no_fit.add(plans_key)
-                continue
-            placements = find_placements(plan)
-            if placements is None:
-                continue
-            pool.apply(placements)
-            out.append((job, placements, plan.d, plan.t))
-        return out
 
 
 class OpportunisticScheduler(Scheduler):

@@ -9,83 +9,78 @@ penalty) — the same structure MARP's ranking uses, so Frenzy's plan priority
 is *consistent* with the simulated world (as in the paper, where MARP's
 estimates come from the same profiles the testbed exhibits).
 
+The event loop itself lives in ``repro.core.lifecycle.LifecycleEngine`` —
+one lifecycle implementation shared with the live orchestrator.  This
+module contributes the sim-only pieces: the rate model (``job_rate``), the
+result aggregation (``SimResult``), and the ``simulate()`` entry point,
+which also accepts **cluster dynamics** (``cluster_events`` from
+``repro.cluster.traces.churn_schedule`` / ``spot_schedule``) and **elastic
+reallocation** (``elastic=True``: running jobs migrate to better-ranked
+MARP plans when capacity frees, charged a checkpoint-restore cost).
+
 Scaling: cluster state lives in a single ``ClusterPool`` shared with the
 scheduler (no per-event snapshot copies), and the event loop is
-incremental — a finish event only re-runs the scheduler when the freed
-capacity could actually admit a queued job (total idle >= the smallest
-device count any queued job can run at).  Skipped runs cannot change
-outcomes: admission always needs at least one job's cheapest plan.
+incremental — a capacity-growing event only re-runs the scheduler when the
+freed capacity could actually admit a queued job (total idle >= the
+smallest device count any queued job can run at).  Skipped runs cannot
+change outcomes: admission always needs at least one job's cheapest plan.
 """
 from __future__ import annotations
 
-import heapq
-import time
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
-from repro.configs.base import ModelConfig
 from repro.core.devices import DEVICE_TYPES
-from repro.core.has import ClusterPool, Node
+from repro.core.has import Node
+from repro.core.lifecycle import (  # noqa: F401  (re-exported compat names)
+    ClusterEvent, Job, LifecycleEngine, Scheduler,
+    DEFAULT_MIGRATION_BANDWIDTH,
+)
 from repro.core.marp import ResourcePlan, _tp_efficiency, _dp_efficiency, \
     _active_analytic
 
-
-@dataclass
-class SimJob:
-    job_id: int
-    arrival: float
-    cfg: ModelConfig
-    global_batch: int
-    seq_len: int
-    total_samples: int                      # work to do
-    plans: Sequence[ResourcePlan] = ()      # filled by MARP for Frenzy
-    requested_n: int = 0                    # user-specified count (baselines)
-    # runtime state
-    start_time: float = -1.0
-    finish_time: float = -1.0
-    placements: Tuple[Tuple[str, int], ...] = ()
-    rate: float = 0.0                       # samples/s while running
-
-    @property
-    def queue_time(self) -> float:
-        return self.start_time - self.arrival
-
-    @property
-    def jct(self) -> float:
-        return self.finish_time - self.arrival
-
-    @property
-    def min_devices(self) -> int:
-        """Fewest devices any admission of this job could use — the
-        simulator's re-schedule gate (scheduler-agnostic lower bound)."""
-        need = min((p.n_devices for p in self.plans), default=1)
-        if self.requested_n:
-            need = min(need, self.requested_n)
-        return need
+#: Back-compat alias — the sim job *is* the unified lifecycle ``Job``.
+SimJob = Job
 
 
 @dataclass
 class SimResult:
-    jobs: List[SimJob]
+    jobs: List[Job]
     sched_time_s: float                     # wall time inside the scheduler
     sched_calls: int
     makespan: float
+    preemptions: int = 0                    # node-departure requeues
+    migrations: int = 0                     # elastic plan upgrades
+    unfinished: int = 0                     # jobs never (re)completed
+
+    @property
+    def finished(self) -> List[Job]:
+        return [j for j in self.jobs if j.finish_time >= 0]
 
     @property
     def avg_jct(self) -> float:
-        return sum(j.jct for j in self.jobs) / len(self.jobs)
+        done = self.finished
+        if not done:                        # churn can starve every job
+            return float("nan")
+        return sum(j.jct for j in done) / len(done)
 
     @property
     def avg_queue_time(self) -> float:
-        return sum(j.queue_time for j in self.jobs) / len(self.jobs)
+        done = self.finished
+        if not done:
+            return float("nan")
+        return sum(j.queue_time for j in done) / len(done)
 
     @property
     def avg_samples_per_s(self) -> float:
+        done = self.finished
+        if not done:
+            return float("nan")
         return sum(j.total_samples / max(j.finish_time - j.start_time, 1e-9)
-                   for j in self.jobs) / len(self.jobs)
+                   for j in done) / len(done)
 
 
-def job_rate(job: SimJob, placements: Sequence[Tuple[str, int]],
+def job_rate(job: Job, placements: Sequence[Tuple[str, int]],
              nodes: Dict[str, Node], d: int, t: int) -> float:
     """Samples/s of a placed job (synchronous DP: slowest device gates)."""
     n_devices = 0
@@ -106,83 +101,35 @@ def job_rate(job: SimJob, placements: Sequence[Tuple[str, int]],
     return n_devices * slowest * eff / flops_per_sample
 
 
-class Scheduler:
-    """Interface: decide placements against the shared cluster state.
+def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
+             scheduler: Scheduler, charge_overhead: bool = True, *,
+             cluster_events: Sequence[ClusterEvent] = (),
+             elastic: bool = False,
+             migration_bandwidth: float = DEFAULT_MIGRATION_BANDWIDTH
+             ) -> SimResult:
+    """Drive the shared lifecycle engine over a trace.
 
-    ``state`` is the simulator's ``ClusterPool`` (or a ``{node_id: Node}``
-    dict from legacy callers).  After ``schedule`` returns, callers must
-    consult ``applied(state)``: True means the scheduler already committed
-    the returned placements to the shared state; False means the caller
-    applies them (a dict is never mutated — pool-aware schedulers work on a
-    private snapshot in that case).
+    charge_overhead: add measured scheduler wall time to the virtual
+    clock (the paper's Fig 5a overhead feeds its JCT comparison).
+    cluster_events: node_join/node_leave/reschedule dynamics (churn/spot).
+    elastic: allow running jobs to migrate to better-ranked plans.
     """
-    name = "base"
-    applies_to_pool = False          # commits to a *shared ClusterPool* itself
-
-    def schedule(self, queued: List[SimJob], state
-                 ) -> List[Tuple[SimJob, Tuple[Tuple[str, int], ...], int, int]]:
-        """Return [(job, placements, d, t)] to start now."""
-        raise NotImplementedError
-
-    def applied(self, state) -> bool:
-        """Whether ``schedule`` already committed its placements to
-        ``state`` — only ever True for a shared ``ClusterPool``."""
-        return self.applies_to_pool and isinstance(state, ClusterPool)
-
-
-def simulate(jobs: Sequence[SimJob], nodes: Sequence[Node],
-             scheduler: Scheduler, charge_overhead: bool = True) -> SimResult:
-    """charge_overhead: add measured scheduler wall time to the virtual
-    clock (the paper's Fig 5a overhead feeds its JCT comparison)."""
-    pool = ClusterPool(nodes, reset=True)
-    applies = scheduler.applied(pool)
-    events: List[Tuple[float, int, str, SimJob]] = []
-    for j in jobs:
-        heapq.heappush(events, (j.arrival, j.job_id, "arrive", j))
-    queued: List[SimJob] = []
-    min_need = float("inf")                 # min over queued of min_devices
-    sched_time = 0.0
-    sched_calls = 0
-    makespan = 0.0
-    seq = len(jobs)
-
-    def run_scheduler(now: float):
-        nonlocal sched_time, sched_calls, seq, min_need
-        t0 = time.perf_counter()
-        decisions = scheduler.schedule(queued, pool)
-        elapsed = time.perf_counter() - t0
-        sched_time += elapsed
-        sched_calls += 1
-        if not decisions:
-            return
-        start = now + (elapsed if charge_overhead else 0.0)
-        started = set()
-        for job, placements, d, t in decisions:
-            if not applies:
-                pool.apply(placements)      # Node.take asserts capacity
-            job.placements = placements
-            job.start_time = start
-            job.rate = job_rate(job, placements, pool.nodes, d, t)
-            finish = start + job.total_samples / job.rate
-            job.finish_time = finish
-            started.add(job.job_id)
-            seq += 1
-            heapq.heappush(events, (finish, seq, "finish", job))
-        queued[:] = [j for j in queued if j.job_id not in started]
-        min_need = min((j.min_devices for j in queued), default=float("inf"))
-
-    while events:
-        now, _, kind, job = heapq.heappop(events)
-        makespan = max(makespan, now)
-        if kind == "arrive":
-            queued.append(job)
-            min_need = min(min_need, job.min_devices)
-            run_scheduler(now)
-        else:  # finish
-            pool.release(job.placements)
-            if queued and pool.total_idle >= min_need:
-                run_scheduler(now)
+    engine = LifecycleEngine(nodes, scheduler,
+                             charge_overhead=charge_overhead,
+                             elastic=elastic,
+                             migration_bandwidth=migration_bandwidth,
+                             reset=True)
+    pool_nodes = engine.pool.nodes
+    engine.rate_fn = lambda job, placements, d, t: \
+        job_rate(job, placements, pool_nodes, d, t)
+    engine.run(jobs, cluster_events)
     unfinished = [j for j in jobs if j.finish_time < 0]
-    assert not unfinished, f"{len(unfinished)} jobs never scheduled"
-    return SimResult(jobs=list(jobs), sched_time_s=sched_time,
-                     sched_calls=sched_calls, makespan=makespan)
+    if not cluster_events:
+        # static cluster: capacity never shrinks, every job must complete
+        assert not unfinished, f"{len(unfinished)} jobs never scheduled"
+    return SimResult(jobs=list(jobs), sched_time_s=engine.sched_time_s,
+                     sched_calls=engine.sched_calls,
+                     makespan=engine.makespan,
+                     preemptions=engine.preemption_count,
+                     migrations=engine.migration_count,
+                     unfinished=len(unfinished))

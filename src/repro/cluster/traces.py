@@ -1,10 +1,15 @@
-"""Workload traces (paper §V-A-b).
+"""Workload traces (paper §V-A-b) and cluster-dynamics traces.
 
 Real Philly / Helios traces are not redistributable offline; we generate
 synthetic traces with the published statistical character (Philly: many
 short small-GPU jobs, heavy-tailed durations; Helios: larger GPU counts,
 longer runtimes — per the papers' own characterisations), plus the paper's
 *NewWorkload*: queues of GPT-2 and BERT models of varying size/batch.
+
+Beyond job arrivals, ``churn_schedule`` and ``spot_schedule`` generate
+*cluster* events (``node_leave``/``node_join``) for the lifecycle engine's
+dynamic-availability path: maintenance-style independent churn, and
+spot-market reclamation waves that take out correlated batches of nodes.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ from dataclasses import replace
 from typing import List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
+from repro.core.lifecycle import ClusterEvent, NODE_JOIN, NODE_LEAVE
 from repro.core.marp import predict_plans_shared
 from repro.cluster.simulator import SimJob
 
@@ -113,6 +119,69 @@ def scale_workload(n_jobs: int, device_types: Sequence[str], seed: int = 0,
         jobs.append(job)
         jid += 1
     return jobs
+
+
+def churn_schedule(nodes: Sequence, *, horizon: float,
+                   churn_frac: float = 0.05, seed: int = 0,
+                   mean_downtime: Optional[float] = None
+                   ) -> List[ClusterEvent]:
+    """Independent node churn (maintenance, failures): a ``churn_frac``
+    fraction of the fleet each departs once, at a uniform time in the first
+    80% of ``horizon``, and rejoins after an exponential downtime (default
+    mean: 10% of the horizon).  Every departure is paired with a rejoin, so
+    capacity always eventually returns and all jobs can finish."""
+    rng = random.Random(400 + seed)
+    n_churn = int(round(len(nodes) * churn_frac))
+    if n_churn <= 0 or horizon <= 0:
+        return []
+    down = mean_downtime if mean_downtime is not None else horizon * 0.1
+    events: List[ClusterEvent] = []
+    for node in rng.sample(list(nodes), min(n_churn, len(nodes))):
+        t_leave = rng.uniform(0.0, horizon * 0.8)
+        t_join = t_leave + rng.expovariate(1.0 / down)
+        events.append(ClusterEvent(time=t_leave, kind=NODE_LEAVE,
+                                   node_id=node.node_id))
+        events.append(ClusterEvent(time=t_join, kind=NODE_JOIN,
+                                   node_id=node.node_id))
+    events.sort(key=lambda e: (e.time, e.kind, e.node_id))
+    return events
+
+
+def spot_schedule(nodes: Sequence, *, horizon: float, n_waves: int = 3,
+                  wave_frac: float = 0.1, seed: int = 0,
+                  mean_downtime: Optional[float] = None
+                  ) -> List[ClusterEvent]:
+    """Spot-fleet reclamation (ShuntServe-style): the market reclaims
+    correlated *waves* of nodes — each wave takes out ``wave_frac`` of the
+    fleet at (almost) the same instant — and replacement capacity is
+    provisioned back after an exponential delay per node."""
+    rng = random.Random(500 + seed)
+    if horizon <= 0 or n_waves <= 0:
+        return []
+    down = mean_downtime if mean_downtime is not None else horizon * 0.15
+    pool = list(nodes)
+    events: List[ClusterEvent] = []
+    # process waves in time order so each wave reclaims only nodes that are
+    # actually online at that instant (no overlapping leave/join pairs)
+    wave_times = sorted(rng.uniform(horizon * 0.05, horizon * 0.8)
+                        for _ in range(n_waves))
+    offline_until: dict = {}
+    for t_wave in wave_times:
+        online = [n for n in pool
+                  if offline_until.get(n.node_id, -1.0) <= t_wave]
+        want = max(1, int(len(pool) * wave_frac))
+        if not online:
+            continue                        # whole fleet reclaimed: skip wave
+        for node in rng.sample(online, min(want, len(online))):
+            t_leave = t_wave + rng.uniform(0.0, 1.0)   # near-simultaneous
+            t_join = t_leave + rng.expovariate(1.0 / down)
+            offline_until[node.node_id] = t_join
+            events.append(ClusterEvent(time=t_leave, kind=NODE_LEAVE,
+                                       node_id=node.node_id))
+            events.append(ClusterEvent(time=t_join, kind=NODE_JOIN,
+                                       node_id=node.node_id))
+    events.sort(key=lambda e: (e.time, e.kind, e.node_id))
+    return events
 
 
 def philly_like(n_jobs: int, device_types: Sequence[str], seed: int = 0

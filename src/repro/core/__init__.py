@@ -1,7 +1,8 @@
 # The paper's primary contribution: MARP (memory-aware resource prediction),
-# HAS (heterogeneity-aware scheduling), the resource orchestrator, and the
-# serverless submission API.
+# HAS (heterogeneity-aware scheduling), the unified job lifecycle engine,
+# and the serverless submission API.
 from repro.core.marp import ResourcePlan, predict_plans, required_devices  # noqa: F401
 from repro.core.has import Node, Allocation, schedule, select_plan, place  # noqa: F401
+from repro.core.lifecycle import Job, LifecycleEngine, ClusterEvent  # noqa: F401
 from repro.core.orchestrator import Orchestrator, make_cluster  # noqa: F401
 from repro.core.serverless import submit, SubmitResult  # noqa: F401

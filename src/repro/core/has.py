@@ -90,6 +90,7 @@ class ClusterPool:
     def __init__(self, nodes: Iterable[Node], *, reset: bool = False):
         self.nodes: Dict[str, Node] = {}
         self._pos: Dict[str, int] = {}
+        self._next_pos = 0                  # monotonic: survives removals
         self._buckets: Dict[Tuple[str, int], _Bucket] = {}
         self._by_type: Dict[str, List[_Bucket]] = {}   # mem-ascending
         self.total_idle = 0
@@ -101,7 +102,8 @@ class ClusterPool:
     # ------------------------------------------------------------- build --
     def _add(self, n: Node) -> None:
         assert n.node_id not in self.nodes, n.node_id
-        pos = len(self.nodes)
+        pos = self._next_pos
+        self._next_pos += 1
         self.nodes[n.node_id] = n
         self._pos[n.node_id] = pos
         key = (n.device_type, n.mem)
@@ -150,6 +152,31 @@ class ClusterPool:
     def release(self, placements: Sequence[Tuple[str, int]]) -> None:
         for node_id, k in placements:
             self.free(node_id, k)
+
+    # ------------------------------------------------------ cluster churn --
+    def add_node(self, n: Node) -> None:
+        """A node joins the cluster (dynamic availability).  Joining nodes
+        take a fresh insertion position — a rejoining node re-enters at the
+        back of its class's FIFO tie-break, exactly as a new node would."""
+        self._add(n)
+
+    def remove_node(self, node_id: str) -> Node:
+        """A node leaves the cluster.  Callers must have released every
+        placement on it first (the lifecycle engine preempts and requeues
+        those jobs): a node with busy devices cannot silently vanish without
+        desyncing job state, so fully-idle is asserted here."""
+        n = self.nodes[node_id]
+        assert n.idle == n.total, (node_id, n.idle, n.total)
+        del self.nodes[node_id]
+        pos = self._pos.pop(node_id)
+        bucket = self._buckets[(n.device_type, n.mem)]
+        bucket.idle_sum -= n.idle
+        self.total_idle -= n.idle
+        if n.idle > 0:
+            i = bisect_left(bucket.entries, (-n.idle, pos))
+            assert i < len(bucket.entries) and bucket.entries[i][1] == pos
+            bucket.entries.pop(i)
+        return n
 
     # ----------------------------------------------------------- queries --
     def avail(self, plan: ResourcePlan) -> int:

@@ -1,0 +1,615 @@
+"""Unified serverless job lifecycle engine (paper §I, §IV).
+
+Frenzy's pitch is a serverless front door: users submit a model and the
+system owns the whole lifecycle.  This module is that lifecycle, once —
+previously it was implemented twice, as ``JobRecord`` + ad-hoc restart in
+``core/orchestrator.py`` (live path) and as ``SimJob`` + a private event
+loop in ``cluster/simulator.py`` (sim path).  Both paths now drive one
+``LifecycleEngine`` around one ``Job`` abstraction.
+
+Typed event set
+---------------
+``arrive``      a job enters the queue; the admission policy runs.
+``finish``      a running job completes (sim: self-scheduled from the rate
+                model; live: an external ``complete_job`` call); capacity is
+                released and queued jobs are re-admitted FIFO.
+``node_join``   a node (re)joins: capacity grows, admission re-runs when the
+                exact ``min_devices`` gate passes, demoted jobs may migrate.
+``node_leave``  a node departs: jobs touching it are checkpointed
+                (progress accrued) and requeued with their remaining work;
+                the node leaves the indexed pool.
+``reschedule``  explicit trigger: re-run admission + the elastic scan.
+
+Elasticity contract
+-------------------
+With ``elastic=True`` (sim path) a *running* job may migrate to a
+better-ranked MARP plan when capacity frees.  A migration is committed only
+when the new placement exists alongside the old one (checkpoint-restore:
+the job keeps computing until the restore target is secured), the new rate
+is higher, and the predicted finish — charged a migration cost of
+save+restore of the training state (``ckpt.checkpoint.migration_seconds``)
+— strictly improves.  Preempted jobs resume from their accrued progress and
+pay the same restore cost; schedulers see them first, ordered by remaining
+work (``fifo_order``).
+
+Static-cluster guarantee: with ``elastic=False`` and no node events, the
+engine's decisions are bit-identical to the seed event loop and the seed
+orchestrator (``tests/test_golden_equivalence.py``) — stale-event epochs,
+progress accrual, and priority ordering are all dormant on that path.
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from dataclasses import dataclass
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence, Set,
+                    Tuple, Union)
+
+from repro.core.has import Allocation, ClusterPool, Node
+from repro.core.marp import ResourcePlan
+
+# Event kinds (the typed event set).
+ARRIVE = "arrive"
+FINISH = "finish"
+NODE_JOIN = "node_join"
+NODE_LEAVE = "node_leave"
+RESCHEDULE = "reschedule"
+
+#: bytes/s assumed for checkpoint save+restore during migration/preemption
+DEFAULT_MIGRATION_BANDWIDTH = 16 * 2 ** 30
+
+
+@dataclass(eq=False)
+class Job:
+    """One job, from submission to completion — the single abstraction
+    behind the former ``JobRecord`` (live) / ``SimJob`` (sim) split.
+
+    Compared/hashable by identity (``eq=False``): a job is an entity with
+    mutable lifecycle state, not a value."""
+    job_id: int
+    arrival: float = 0.0
+    cfg: object = None                      # ModelConfig (None in unit fuzz)
+    global_batch: int = 0
+    seq_len: int = 0
+    total_samples: int = 1                  # work to do
+    plans: Sequence[ResourcePlan] = ()      # MARP's ranked plans
+    requested_n: int = 0                    # user-specified count (baselines)
+    # lifecycle state
+    state: str = "queued"                   # queued | running | done
+    start_time: float = -1.0                # first admission (queue_time base)
+    finish_time: float = -1.0
+    placements: Tuple[Tuple[str, int], ...] = ()
+    rate: float = 0.0                       # samples/s while running (sim)
+    allocation: Optional[Allocation] = None
+    plan: Optional[ResourcePlan] = None     # plan currently running under
+    plan_rank: int = -1                     # index of ``plan`` in ``plans``
+    # elasticity / churn state
+    samples_done: float = 0.0               # progress accrued at checkpoints
+    progress_time: float = 0.0              # virtual time progress resumes
+    epoch: int = 0                          # bumps on preempt/migrate;
+                                            # stale finish events are dropped
+    preemptions: int = 0
+    migrations: int = 0
+
+    @property
+    def queue_time(self) -> float:
+        """Wait from arrival to first start — virtual seconds on the sim
+        path, event ordinals on the live path (its clock is the
+        orchestrator's submission/release counter).  NaN until started."""
+        if self.start_time < 0:
+            return float("nan")
+        return self.start_time - self.arrival
+
+    @property
+    def jct(self) -> float:
+        """Completion time since arrival (same clock caveat as
+        ``queue_time``).  NaN until finished."""
+        if self.finish_time < 0:
+            return float("nan")
+        return self.finish_time - self.arrival
+
+    @property
+    def remaining_samples(self) -> float:
+        return max(self.total_samples - self.samples_done, 0.0)
+
+    @property
+    def min_devices(self) -> int:
+        """Fewest devices any admission of this job could use — the
+        engine's re-schedule gate (scheduler-agnostic lower bound)."""
+        need = min((p.n_devices for p in self.plans), default=1)
+        if self.requested_n:
+            need = min(need, self.requested_n)
+        return need
+
+
+@dataclass(frozen=True)
+class ClusterEvent:
+    """Externally supplied cluster-dynamics event (churn/spot traces).
+
+    ``node_join`` with ``node=None`` re-adds the previously departed node of
+    that id (all devices idle again); with a ``Node`` it grows the fleet.
+    """
+    time: float
+    kind: str                               # node_join | node_leave | reschedule
+    node_id: str = ""
+    node: Optional[Node] = None
+
+
+# --------------------------------------------------------------------------
+# Admission policy plumbing (shared by the live orchestrator, serverless
+# submission, the simulator, and the scheduler baselines).
+
+ClusterState = Union[ClusterPool, Dict[str, Node]]
+
+
+def nodes_map(state: ClusterState) -> Dict[str, Node]:
+    return state.nodes if isinstance(state, ClusterPool) else state
+
+
+def snapshot_nodes(state: ClusterState) -> Dict[str, Node]:
+    """Private mutable copies, seed ``_clone_nodes`` semantics."""
+    return {k: Node(v.node_id, v.device_type, v.mem, v.total, v.idle)
+            for k, v in nodes_map(state).items()}
+
+
+def fifo_order(queued: Sequence[Job]) -> List[Job]:
+    """FIFO by (arrival, id) — except preempted jobs, which come first,
+    least remaining work ahead (finish nearly-done work before fresh
+    admissions).  Without preemptions this is exactly the seed order."""
+    return sorted(queued, key=_fifo_key)
+
+
+def _fifo_key(j: Job):
+    if j.preemptions:
+        return (0, j.total_samples - j.samples_done, j.job_id)
+    return (1, j.arrival, j.job_id)
+
+
+class Scheduler:
+    """Interface: decide placements against the shared cluster state.
+
+    ``state`` is the engine's ``ClusterPool`` (or a ``{node_id: Node}``
+    dict from legacy callers).  After ``schedule`` returns, callers must
+    consult ``applied(state)``: True means the scheduler already committed
+    the returned placements to the shared state; False means the caller
+    applies them (a dict is never mutated — pool-aware schedulers work on a
+    private snapshot in that case).
+    """
+    name = "base"
+    applies_to_pool = False          # commits to a *shared ClusterPool* itself
+
+    def schedule(self, queued: List[Job], state: ClusterState
+                 ) -> List[Tuple[Job, Tuple[Tuple[str, int], ...], int, int]]:
+        """Return [(job, placements, d, t)] to start now."""
+        raise NotImplementedError
+
+    def applied(self, state) -> bool:
+        """Whether ``schedule`` already committed its placements to
+        ``state`` — only ever True for a shared ``ClusterPool``."""
+        return self.applies_to_pool and isinstance(state, ClusterPool)
+
+
+class HASAdmission(Scheduler):
+    """The one admission policy: MARP's ranked plans + HAS best-fit
+    placement, ``fifo_order``.  ``FrenzyScheduler`` is this class under its
+    paper name; the orchestrator's restart-on-release runs it too.
+
+    Runs directly against the indexed ``ClusterPool``: plan retrieval is a
+    per-plan counter lookup and placement touches only the entries it
+    selects, so a pass is O(queue x plans) instead of O(queue x plans x
+    nodes).  Placements are committed to a shared pool as jobs are admitted
+    (``applies_to_pool``) — a rejected job mutates nothing, so there is no
+    rollback path.
+    """
+    name = "has"
+    applies_to_pool = True
+
+    def schedule(self, queued, state):
+        if isinstance(state, ClusterPool):
+            pool = state
+        else:
+            pool = ClusterPool(snapshot_nodes(state).values())
+        select_plan = pool.select_plan
+        find_placements = pool.find_placements
+        out = []
+        # Identical plan lists are shared objects (predict_plans_shared), and
+        # within one pass capacity only shrinks (admissions take, nothing
+        # frees) — so a plan list that found no feasible plan stays
+        # infeasible for the rest of the pass.  Dedupe those no-fit walks by
+        # object identity.
+        no_fit = set()
+        for job in fifo_order(queued):
+            plans_key = id(job.plans)
+            if plans_key in no_fit:
+                continue                    # backfill: later jobs may fit
+            plan = select_plan(job.plans)
+            if plan is None:
+                no_fit.add(plans_key)
+                continue
+            placements = find_placements(plan)
+            if placements is None:
+                continue
+            pool.apply(placements)
+            _record_plan(job, plan, placements)
+            out.append((job, placements, plan.d, plan.t))
+        return out
+
+
+def _record_plan(job: Job, plan: ResourcePlan,
+                 placements: Tuple[Tuple[str, int], ...],
+                 allocation: Optional[Allocation] = None) -> None:
+    """Remember which ranked plan a job runs under (the elastic scan
+    migrates jobs running below their top-ranked plan)."""
+    job.plan = plan
+    try:
+        job.plan_rank = job.plans.index(plan)
+    except ValueError:                      # plan not from job.plans
+        job.plan_rank = 0
+    job.allocation = allocation if allocation is not None else \
+        Allocation(plan=plan, placements=tuple(placements))
+
+
+# --------------------------------------------------------------------------
+
+
+#: sim rate model: (job, placements, d, t) -> samples/s
+RateFn = Callable[[Job, Tuple[Tuple[str, int], ...], int, int], float]
+
+
+class LifecycleEngine:
+    """One event loop, one admission/restart policy, for both paths.
+
+    * **Live path** (``Orchestrator`` / ``serverless.submit``): no rate
+      model; ``submit_job`` / ``complete_job`` / ``node_join`` /
+      ``node_leave`` are called as the world changes, and the engine keeps
+      the pool + queue + job states consistent.
+    * **Sim path** (``cluster.simulator.simulate``): a ``rate_fn`` prices
+      placements, ``run()`` drives the virtual clock from arrival and
+      cluster-event traces, and finish events are self-scheduled.
+
+    Invariants (extending ROADMAP "Control-plane architecture"):
+    the engine never mutates idle counts except through the pool; admission
+    re-runs on capacity growth only when ``pool.total_idle >= min(queued
+    min_devices)`` (exact lower bound — skipped runs cannot change
+    decisions); all elastic/churn machinery is dormant when ``elastic`` is
+    False and no node events occur.
+    """
+
+    def __init__(self, nodes: Iterable[Node], scheduler: Scheduler = None, *,
+                 rate_fn: Optional[RateFn] = None,
+                 charge_overhead: bool = False,
+                 elastic: bool = False,
+                 migration_bandwidth: float = DEFAULT_MIGRATION_BANDWIDTH,
+                 reset: bool = False):
+        self.pool = ClusterPool(nodes, reset=reset)
+        self.scheduler = scheduler if scheduler is not None else HASAdmission()
+        self._applies = self.scheduler.applied(self.pool)
+        self.rate_fn = rate_fn
+        self.charge_overhead = charge_overhead
+        self.elastic = elastic
+        self.migration_bandwidth = migration_bandwidth
+        self.jobs: Dict[int, Job] = {}
+        self.queued: List[Job] = []
+        self._min_need = float("inf")       # min over queued of min_devices
+        self._events: List[tuple] = []      # (time, seq, kind, payload, epoch)
+        self._seq = 0
+        self._offline: Dict[str, Node] = {}   # departed nodes, by id
+        self._node_jobs: Dict[str, Set[int]] = {}   # node -> running job ids
+        # jobs running below their top-ranked plan: id -> fewest devices any
+        # better-ranked plan needs (the elastic scan's capacity gate)
+        self._demoted: Dict[int, int] = {}
+        self._mig_cost: Dict[object, float] = {}
+        # counters
+        self.sched_time_s = 0.0
+        self.sched_calls = 0
+        self.preemption_count = 0
+        self.migration_count = 0
+        self.makespan = 0.0
+
+    # ------------------------------------------------------------ live API
+    def submit_job(self, job: Job, now: float = 0.0) -> Job:
+        """Live ``arrive``: register + admit.  Single-job admission only:
+        capacity cannot have grown since the last pass, so no already-queued
+        job can newly fit — a full-queue pass would make identical decisions
+        (golden-tested) at O(queue) cost per submit."""
+        self.jobs.setdefault(job.job_id, job)
+        if not self.try_admit(job, now):
+            self.queued.append(job)
+            self._min_need = min(self._min_need, job.min_devices)
+        return job
+
+    def try_admit(self, job: Job, now: float = 0.0) -> bool:
+        """Single-job admission (the orchestrator's ``try_start``): HAS over
+        this job's plans only, ignoring the rest of the queue."""
+        if job.state != "queued":
+            return False
+        alloc = self.pool.schedule(job.plans)
+        if alloc is None:
+            return False
+        self.pool.apply(alloc.placements)
+        _record_plan(job, alloc.plan, alloc.placements, allocation=alloc)
+        self._start(job, alloc.placements, alloc.plan.d, alloc.plan.t, now)
+        if job in self.queued:
+            self.queued.remove(job)
+            self._recompute_min_need()
+        return True
+
+    def complete_job(self, job_id: int, now: float = 0.0) -> None:
+        """Live ``finish``: release capacity, restart queued jobs (the one
+        restart policy — the scheduler, FIFO with backfill)."""
+        job = self.jobs[job_id]
+        if job.state != "running":
+            return
+        self._finish(job, now)
+        if self.queued and self.pool.total_idle >= self._min_need:
+            self._run_scheduler(now)
+        self._maybe_migrate(now)
+
+    def node_join(self, node: Optional[Node] = None, node_id: str = "",
+                  now: float = 0.0) -> Optional[Node]:
+        """``node_join``: grow the pool (or re-add a departed node, all
+        devices idle), then re-admit / migrate."""
+        if node is None:
+            node = self._offline.pop(node_id, None)
+            if node is None:
+                return None                 # unknown id: ignore
+            node.idle = node.total
+        else:
+            self._offline.pop(node.node_id, None)
+        if node.node_id in self.pool.nodes:
+            return self.pool.nodes[node.node_id]
+        self.pool.add_node(node)
+        if self.queued and self.pool.total_idle >= self._min_need:
+            self._run_scheduler(now)
+        self._maybe_migrate(now)
+        return node
+
+    def node_leave(self, node_id: str, now: float = 0.0) -> List[Job]:
+        """``node_leave``: checkpoint-preempt every job touching the node,
+        requeue them with remaining work, drop the node from the pool."""
+        if node_id not in self.pool.nodes:
+            return []                       # already gone: ignore
+        victims = sorted((self.jobs[jid]
+                          for jid in self._node_jobs.get(node_id, ())),
+                         key=lambda j: j.job_id)
+        for job in victims:
+            self._preempt(job, now)
+        self._offline[node_id] = self.pool.remove_node(node_id)
+        if self.queued and self.pool.total_idle >= self._min_need:
+            self._run_scheduler(now)
+        self._maybe_migrate(now)
+        return victims
+
+    def reschedule(self, now: float = 0.0) -> None:
+        """Explicit ``reschedule``: re-run admission + the elastic scan."""
+        if self.queued:
+            self._run_scheduler(now)
+        self._maybe_migrate(now)
+
+    # ------------------------------------------------------------- sim API
+    def run(self, jobs: Sequence[Job],
+            cluster_events: Sequence[ClusterEvent] = ()) -> None:
+        """Event loop over job arrivals + cluster dynamics (sim path).
+
+        Requires ``rate_fn``.  Event order is (time, seq): arrivals carry
+        their job id, trace events and self-scheduled finishes draw from one
+        monotonic counter — with no cluster events this is bit-identical to
+        the seed loop's ordering.
+        """
+        assert self.rate_fn is not None, "sim run() needs a rate_fn"
+        events = self._events
+        for j in jobs:
+            self.jobs[j.job_id] = j
+            heapq.heappush(events, (j.arrival, j.job_id, ARRIVE, j, 0))
+        seq = len(jobs)
+        for ev in sorted(cluster_events,
+                         key=lambda e: (e.time, e.kind, e.node_id)):
+            heapq.heappush(events, (ev.time, seq, ev.kind, ev, 0))
+            seq += 1
+        self._seq = seq
+        while events:
+            now, _, kind, payload, epoch = heapq.heappop(events)
+            if kind == ARRIVE:
+                self.makespan = max(self.makespan, now)
+                self._on_arrive(now, payload)
+            elif kind == FINISH:
+                job = payload
+                if epoch != job.epoch or job.state != "running":
+                    continue                # stale: job migrated/preempted
+                self.makespan = max(self.makespan, now)
+                self._finish(job, now)
+                if self.queued and self.pool.total_idle >= self._min_need:
+                    self._run_scheduler(now)
+                self._maybe_migrate(now)
+            elif kind == NODE_JOIN:
+                self.node_join(payload.node, payload.node_id, now)
+            elif kind == NODE_LEAVE:
+                self.node_leave(payload.node_id, now)
+            elif kind == RESCHEDULE:
+                self.reschedule(now)
+            else:
+                raise ValueError(f"unknown event kind {kind!r}")
+
+    # ------------------------------------------------------ event handlers
+    def _on_arrive(self, now: float, job: Job) -> None:
+        self.jobs.setdefault(job.job_id, job)
+        self.queued.append(job)
+        self._min_need = min(self._min_need, job.min_devices)
+        self._run_scheduler(now)
+
+    def _run_scheduler(self, now: float) -> None:
+        t0 = time.perf_counter()
+        decisions = self.scheduler.schedule(self.queued, self.pool)
+        elapsed = time.perf_counter() - t0
+        self.sched_time_s += elapsed
+        self.sched_calls += 1
+        if not decisions:
+            return
+        start = now + (elapsed if self.charge_overhead else 0.0)
+        started = set()
+        for job, placements, d, t in decisions:
+            if not self._applies:
+                self.pool.apply(placements)  # Node.take asserts capacity
+            self._start(job, placements, d, t, start)
+            started.add(job.job_id)
+        self.queued[:] = [j for j in self.queued if j.job_id not in started]
+        self._min_need = min((j.min_devices for j in self.queued),
+                             default=float("inf"))
+
+    def _start(self, job: Job, placements, d: int, t: int,
+               start: float) -> None:
+        job.placements = tuple(placements)
+        job.state = "running"
+        if job.start_time < 0:
+            job.start_time = start
+        self._register(job)
+        if self.rate_fn is not None:
+            job.rate = self.rate_fn(job, job.placements, d, t)
+            # preempted jobs resume from their checkpoint: restore cost first
+            resume = start + (self._migration_seconds(job)
+                              if job.preemptions else 0.0)
+            job.progress_time = resume
+            finish = resume + (job.total_samples - job.samples_done) / job.rate
+            job.finish_time = finish
+            self._seq += 1
+            heapq.heappush(self._events,
+                           (finish, self._seq, FINISH, job, job.epoch))
+        self._track_demotion(job)
+
+    def _finish(self, job: Job, now: float) -> None:
+        self.pool.release(job.placements)
+        self._unregister(job)
+        job.state = "done"
+        job.finish_time = now
+        job.samples_done = float(job.total_samples)
+        self._demoted.pop(job.job_id, None)
+
+    def _preempt(self, job: Job, now: float) -> None:
+        """Checkpoint a running job and requeue it with remaining work."""
+        self._accrue(job, now)
+        self.pool.release(job.placements)
+        self._unregister(job)
+        job.placements = ()
+        job.rate = 0.0
+        job.finish_time = -1.0              # old prediction is void
+        job.state = "queued"
+        job.epoch += 1                      # in-flight finish becomes stale
+        job.preemptions += 1
+        job.allocation = None
+        job.plan = None
+        job.plan_rank = -1
+        self.preemption_count += 1
+        self._demoted.pop(job.job_id, None)
+        self.queued.append(job)
+        self._min_need = min(self._min_need, job.min_devices)
+
+    # --------------------------------------------------- elastic migration
+    def _maybe_migrate(self, now: float) -> None:
+        """Migrate demoted jobs (running below their top-ranked plan) to a
+        better-ranked plan when freed capacity allows and the predicted
+        finish — including the checkpoint save+restore cost — improves.
+
+        The new placement must fit *alongside* the old one (the job keeps
+        computing until the restore target is secured), so a failed check
+        mutates nothing.
+        """
+        if not self.elastic or self.rate_fn is None or not self._demoted:
+            return
+        # exact capacity gate (mirrors the admission min_need gate): no
+        # better-ranked plan can be satisfiable with fewer idle devices than
+        # its device count, so a skipped scan cannot change decisions
+        if self.pool.total_idle < min(self._demoted.values()):
+            return
+        migrated = False
+        for jid in sorted(self._demoted):
+            job = self.jobs[jid]
+            if job.state != "running" or job.plan is None:
+                self._demoted.pop(jid, None)
+                continue
+            best = self.pool.select_plan(job.plans)
+            if best is None:
+                continue
+            rank = job.plans.index(best)
+            if rank >= job.plan_rank:
+                continue
+            placements = self.pool.find_placements(best)
+            if placements is None:
+                continue
+            new_rate = self.rate_fn(job, placements, best.d, best.t)
+            if new_rate <= job.rate:
+                continue
+            mig = self._migration_seconds(job)
+            done = job.samples_done + max(now - job.progress_time, 0.0) * job.rate
+            done = min(done, float(job.total_samples))
+            new_finish = now + mig + (job.total_samples - done) / new_rate
+            if new_finish >= job.finish_time:
+                continue                    # migration does not pay off
+            # commit: apply new, release old, reschedule the finish
+            self.pool.apply(placements)
+            self.pool.release(job.placements)
+            self._unregister(job)
+            job.samples_done = done
+            job.progress_time = now + mig
+            job.placements = tuple(placements)
+            self._register(job)
+            _record_plan(job, best, placements)
+            job.plan_rank = rank
+            job.rate = new_rate
+            job.epoch += 1                  # stale the old finish event
+            job.migrations += 1
+            self.migration_count += 1
+            job.finish_time = new_finish
+            self._seq += 1
+            heapq.heappush(self._events,
+                           (new_finish, self._seq, FINISH, job, job.epoch))
+            migrated = True
+            self._track_demotion(job)
+        # migrations released their old (often different-class) placements;
+        # queued jobs may now fit — one more admission pass, same exact gate
+        if migrated and self.queued and self.pool.total_idle >= self._min_need:
+            self._run_scheduler(now)
+
+    def _migration_seconds(self, job: Job) -> float:
+        """Checkpoint-restore cost of moving/resuming this job, from the
+        serialized training-state size (``ckpt.checkpoint``)."""
+        if job.cfg is None:
+            return 0.0
+        cost = self._mig_cost.get(job.cfg)
+        if cost is None:
+            from repro.ckpt.checkpoint import migration_seconds
+            cost = migration_seconds(job.cfg,
+                                     bandwidth=self.migration_bandwidth)
+            self._mig_cost[job.cfg] = cost
+        return cost
+
+    # ------------------------------------------------------------- helpers
+    def _track_demotion(self, job: Job) -> None:
+        """(Un)register a running job with the elastic scan, keyed by the
+        fewest devices any better-ranked plan of it would need."""
+        if self.elastic and job.plan is not None and job.plan_rank > 0:
+            self._demoted[job.job_id] = min(
+                p.n_devices for p in job.plans[:job.plan_rank])
+        else:
+            self._demoted.pop(job.job_id, None)
+
+    def _accrue(self, job: Job, now: float) -> None:
+        """Fold compute since the last checkpoint into ``samples_done``."""
+        if job.rate > 0.0 and now > job.progress_time:
+            job.samples_done = min(
+                job.samples_done + (now - job.progress_time) * job.rate,
+                float(job.total_samples))
+        job.progress_time = now
+
+    def _register(self, job: Job) -> None:
+        for nid, _ in job.placements:
+            self._node_jobs.setdefault(nid, set()).add(job.job_id)
+
+    def _unregister(self, job: Job) -> None:
+        for nid, _ in job.placements:
+            ids = self._node_jobs.get(nid)
+            if ids is not None:
+                ids.discard(job.job_id)
+
+    def _recompute_min_need(self) -> None:
+        self._min_need = min((j.min_devices for j in self.queued),
+                             default=float("inf"))

@@ -1,36 +1,45 @@
 """Resource Orchestrator (paper §IV): tracks heterogeneous cluster state,
-executes allocation/release, and drives the serverless job lifecycle."""
+executes allocation/release, and drives the serverless job lifecycle.
+
+The lifecycle itself (admission, FIFO restart on release, node churn
+handling) lives in ``repro.core.lifecycle.LifecycleEngine`` — the same
+implementation the cluster simulator drives — so the live path and the sim
+path cannot drift.  The orchestrator is the live-cluster face of it: no
+virtual clock, jobs finish when ``release`` is called, and ``node_join`` /
+``node_leave`` mirror real capacity coming and going (departing nodes'
+jobs are checkpoint-preempted and requeued with their progress).
+"""
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.devices import DEVICE_TYPES
 from repro.core.has import Allocation, ClusterPool, Node
+from repro.core.lifecycle import HASAdmission, Job, LifecycleEngine
 from repro.core.marp import ResourcePlan
 
-
-@dataclass
-class JobRecord:
-    job_id: int
-    plans: Sequence[ResourcePlan]
-    allocation: Optional[Allocation] = None
-    state: str = "queued"            # queued | running | done
+#: Back-compat alias — the live job record *is* the unified lifecycle Job.
+JobRecord = Job
 
 
 class Orchestrator:
     """Owns cluster state; allocate/release are the only mutation points.
 
-    State lives in a long-lived ``ClusterPool``, so every HAS pass is an
-    indexed lookup rather than a cluster scan — allocation/release keep the
-    per-class idle counters in sync incrementally."""
+    State lives in a long-lived ``ClusterPool`` inside the shared
+    ``LifecycleEngine``, so every HAS pass is an indexed lookup rather than
+    a cluster scan — allocation/release keep the per-class idle counters in
+    sync incrementally."""
 
     def __init__(self, nodes: Sequence[Node]):
-        self.pool = ClusterPool(nodes)
+        self.engine = LifecycleEngine(nodes, HASAdmission())
+        self.pool: ClusterPool = self.engine.pool
         self.nodes: Dict[str, Node] = self.pool.nodes
-        self.jobs: Dict[int, JobRecord] = {}
+        self.jobs: Dict[int, Job] = self.engine.jobs
         self._ids = itertools.count()
+        # the live path has no wall clock: submit/release/churn calls tick
+        # an event counter, so Job.queue_time/jct read as "events waited"
+        self._clock = itertools.count()
 
     # ------------------------------------------------------------ state --
     def idle_devices(self) -> int:
@@ -40,33 +49,35 @@ class Orchestrator:
         return list(self.nodes.values())
 
     # ------------------------------------------------------- lifecycle ---
-    def submit(self, plans: Sequence[ResourcePlan]) -> JobRecord:
-        rec = JobRecord(job_id=next(self._ids), plans=plans)
-        self.jobs[rec.job_id] = rec
-        self.try_start(rec)
-        return rec
+    def submit(self, plans: Sequence[ResourcePlan]) -> Job:
+        """Serverless arrival: one admission policy (FIFO + ranked HAS)."""
+        job = Job(job_id=next(self._ids), plans=plans)
+        job.arrival = float(next(self._clock))
+        self.engine.submit_job(job, now=job.arrival)
+        return job
 
-    def try_start(self, rec: JobRecord) -> bool:
-        if rec.state != "queued":
-            return False
-        alloc = self.pool.schedule(rec.plans)
-        if alloc is None:
-            return False
-        self.pool.apply(alloc.placements)     # Node.take asserts capacity
-        rec.allocation = alloc
-        rec.state = "running"
-        return True
+    def try_start(self, rec: Job) -> bool:
+        """Single-job admission attempt (bypasses queue order)."""
+        return self.engine.try_admit(rec, now=float(next(self._clock)))
 
     def release(self, job_id: int) -> None:
-        rec = self.jobs[job_id]
-        if rec.state != "running":
-            return
-        self.pool.release(rec.allocation.placements)
-        rec.state = "done"
-        # opportunistically start queued jobs (FIFO by id)
-        for other in sorted(self.jobs.values(), key=lambda r: r.job_id):
-            if other.state == "queued":
-                self.try_start(other)
+        """Job completed: free its devices and restart queued jobs through
+        the shared admission policy (FIFO with backfill)."""
+        self.engine.complete_job(job_id, now=float(next(self._clock)))
+
+    # --------------------------------------------------- cluster churn ---
+    def node_join(self, node: Optional[Node] = None,
+                  node_id: str = "") -> Optional[Node]:
+        """Capacity arrives (new node, or a departed node returning);
+        queued jobs are re-admitted immediately."""
+        return self.engine.node_join(node, node_id,
+                                     now=float(next(self._clock)))
+
+    def node_leave(self, node_id: str) -> List[Job]:
+        """Capacity departs: jobs touching the node are checkpoint-preempted
+        and requeued (they restart, possibly smaller, as space allows).
+        Returns the preempted jobs."""
+        return self.engine.node_leave(node_id, now=float(next(self._clock)))
 
 
 def make_cluster(spec: Sequence[tuple]) -> List[Node]:

@@ -1,20 +1,23 @@
 """The serverless front door (paper §I): users submit a model + training
-config and nothing else; MARP predicts resources, HAS places the job, the
-orchestrator tracks it.  This is what `python -m repro.launch.submit` drives.
+config and nothing else; MARP predicts resources, HAS places the job, and
+the shared lifecycle engine (via the orchestrator) owns it from there —
+admission, FIFO restart on release, and requeue-with-progress when cluster
+capacity churns.  This is what `python -m repro.launch.submit` drives.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import Sequence
 
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.lifecycle import Job
 from repro.core.marp import ResourcePlan, predict_plans
-from repro.core.orchestrator import JobRecord, Orchestrator
+from repro.core.orchestrator import Orchestrator
 
 
 @dataclass
 class SubmitResult:
-    job: JobRecord
+    job: Job
     plans: Sequence[ResourcePlan]
 
     @property
@@ -33,6 +36,9 @@ class SubmitResult:
         else:
             lines.append(f"  queued ({len(self.plans)} feasible plans,"
                          " awaiting resources)")
+        if self.job.preemptions or self.job.migrations:
+            lines.append(f"  lifecycle: {self.job.preemptions} preemption(s),"
+                         f" {self.job.migrations} migration(s)")
         return "\n".join(lines)
 
 

@@ -20,7 +20,8 @@ from repro.core import memory_model as mm
 from repro.core.devices import DEVICE_TYPES
 from repro.core.has import ClusterPool, Node, place, select_plan
 from repro.core.marp import ResourcePlan, predict_plans, _predict_plans_cached
-from repro.core.orchestrator import make_cluster, PAPER_SIM_CLUSTER
+from repro.core.orchestrator import Orchestrator, make_cluster, \
+    PAPER_SIM_CLUSTER
 
 GB = 1024 ** 3
 
@@ -347,6 +348,85 @@ def test_frenzy_simulation_identical_to_seed(trace):
         assert g.start_time == w.start_time, w.job_id
         assert g.finish_time == w.finish_time, w.job_id
         assert g.rate == w.rate, w.job_id
+
+
+# --------------------------------------------------------------------------
+# live-path golden test: lifecycle-engine orchestrator vs seed orchestrator
+
+class _SeedOrchestrator:
+    """Verbatim seed lifecycle: JobRecord + try_start + FIFO restart on
+    release (pre-lifecycle-engine ``core/orchestrator.py``)."""
+
+    class Rec:
+        def __init__(self, job_id, plans):
+            self.job_id, self.plans = job_id, plans
+            self.allocation, self.state = None, "queued"
+
+    def __init__(self, nodes):
+        self.pool = ClusterPool(nodes)
+        self.jobs = {}
+        self._next = 0
+
+    def submit(self, plans):
+        rec = self.Rec(self._next, plans)
+        self._next += 1
+        self.jobs[rec.job_id] = rec
+        self.try_start(rec)
+        return rec
+
+    def try_start(self, rec):
+        if rec.state != "queued":
+            return False
+        alloc = self.pool.schedule(rec.plans)
+        if alloc is None:
+            return False
+        self.pool.apply(alloc.placements)
+        rec.allocation = alloc
+        rec.state = "running"
+        return True
+
+    def release(self, job_id):
+        rec = self.jobs[job_id]
+        if rec.state != "running":
+            return
+        self.pool.release(rec.allocation.placements)
+        rec.state = "done"
+        for other in sorted(self.jobs.values(), key=lambda r: r.job_id):
+            if other.state == "queued":
+                self.try_start(other)
+
+
+def test_orchestrator_lifecycle_identical_to_seed():
+    """Random submit/release interleavings: the shared lifecycle engine's
+    live path makes bit-identical admission/restart decisions to the seed
+    orchestrator (allocations, placements, states)."""
+    rng = random.Random(5)
+    for trial in range(60):
+        base = _random_cluster(rng, max_nodes=8)
+        for n in base:
+            n.idle = n.total
+        want = _SeedOrchestrator(copy.deepcopy(base))
+        got = Orchestrator(copy.deepcopy(base))
+        running = []
+        for step in range(40):
+            if running and rng.random() < 0.4:
+                jid = running.pop(rng.randrange(len(running)))
+                want.release(jid)
+                got.release(jid)
+            else:
+                plans = [_random_plan(rng, rng.choice(["X", "Y"]))
+                         for _ in range(rng.randint(1, 4))]
+                w = want.submit(list(plans))
+                g = got.submit(list(plans))
+                assert g.job_id == w.job_id
+                if w.state == "running":
+                    running.append(w.job_id)
+            for w, g in zip(want.jobs.values(), got.jobs.values()):
+                assert g.state == w.state, (trial, step, w.job_id)
+                wp = w.allocation.placements if w.allocation else None
+                gp = g.allocation.placements if g.allocation else None
+                assert gp == wp, (trial, step, w.job_id)
+            assert got.pool.total_idle == want.pool.total_idle
 
 
 # --------------------------------------------------------------------------
