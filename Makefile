@@ -4,11 +4,13 @@
 #   make tier1-fast   tier1 minus tests marked `slow`
 #   make bench-smoke  benchmark grid, slow corners trimmed
 #   make bench        full benchmark grid (tens of seconds)
+#   make bench-json   full grid, rows recorded to BENCH_<date>.json
+#                     (the perf trajectory; commit the files that matter)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 tier1-fast bench-smoke bench
+.PHONY: tier1 tier1-fast bench-smoke bench bench-json
 
 tier1:
 	$(PY) -m pytest -x -q
@@ -21,3 +23,6 @@ bench-smoke:
 
 bench:
 	$(PY) -m benchmarks.run
+
+bench-json:
+	$(PY) -m benchmarks.run --json BENCH_$$(date +%Y%m%d).json

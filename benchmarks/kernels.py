@@ -11,8 +11,8 @@ import numpy as np
 
 
 def _time(fn, *args, reps=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    out = fn(*args)                                  # one warm-up call only
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
@@ -37,6 +37,20 @@ def run():
     flops = 2 * 2 * b * H * D * s * s / 2
     rows.append(("kernels/chunked_attention_jnp_1k", us, flops / (us * 1e-6) / 1e9))
 
+    # dispatched production path (resolves to the chunked-jnp ref on CPU,
+    # the Pallas flash kernel on TPU) vs the direct default-chunk call the
+    # model layer used pre-dispatch — the dispatched path must at least match
+    from repro.kernels import dispatch
+    impl, _ = dispatch.resolve("attention")
+    f_prod = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True))
+    us_p = _time(f_prod, q, k, v)
+    rows.append(("kernels/chunked_attention_direct_1k", us_p,
+                 flops / (us_p * 1e-6) / 1e9))
+    fd = jax.jit(lambda q, k, v: dispatch.attention(q, k, v, causal=True))
+    us_d = _time(fd, q, k, v)
+    rows.append((f"kernels/dispatch_attention_{impl}_1k", us_d,
+                 flops / (us_d * 1e-6) / 1e9))
+
     from repro.models.attention import chunked_attention as ca
     f2 = jax.jit(lambda q, k, v: ca(q, k, v, causal=True, window=256,
                                     q_chunk=256, kv_chunk=256))
@@ -55,6 +69,26 @@ def run():
     f3 = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
     rows.append(("kernels/ssd_chunked_jnp_1k", _time(f3, x, dt, A, B, C, Dp),
                  s2))
+
+    # dispatched SSD path on the raw (pre-softplus) inputs the model passes,
+    # vs the seed production composition (softplus + A from A_log + chunked
+    # scan) on the same inputs — the dispatched path must at least match
+    dt_raw = jax.random.normal(jax.random.split(key, 7)[6], (b2, s2, h2),
+                               jnp.bfloat16)
+    A_log = jax.random.normal(ks[2], (h2,)) * 0.3
+    dtb = jnp.full((h2,), 0.1, jnp.float32)
+
+    def ssd_prod_direct(x, dt_raw, A_log, B, C, Dp, dtb):
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + dtb)
+        return ssd_chunked(x, dt, -jnp.exp(A_log), B, C, Dp)[0]
+
+    rows.append(("kernels/ssd_direct_prod_1k",
+                 _time(jax.jit(ssd_prod_direct), x, dt_raw, A_log, B, C, Dp,
+                       dtb), s2))
+    impl_s, _ = dispatch.resolve("ssd_scan")
+    f3d = jax.jit(lambda *a: dispatch.ssd(*a)[0])
+    rows.append((f"kernels/dispatch_ssd_{impl_s}_1k",
+                 _time(f3d, x, dt_raw, A_log, B, C, Dp, dtb), s2))
 
     # Pallas kernels in interpret mode: correctness + (slow) wall time
     from repro.kernels.flash_attention import flash_attention, attention_ref

@@ -1,11 +1,15 @@
 """Benchmark driver — one module per paper table/figure plus the roofline.
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json OUT.json`` also
+writes the rows (plus backend/failure metadata) to a JSON file so runs
+land in ``BENCH_*.json`` and build the perf trajectory.
 
     PYTHONPATH=src python -m benchmarks.run [--only <prefix>] [--skip-slow]
+        [--json OUT.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -15,11 +19,13 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--skip-slow", action="store_true",
                     help="skip the memcheck subprocess (XLA compiles)")
+    ap.add_argument("--json", default="",
+                    help="also write rows to this JSON file")
     args = ap.parse_args()
 
     from benchmarks import (elastic_churn, jct_newworkload, jct_traces,
                             kernels, memory_accuracy, roofline,
-                            sched_overhead, sched_scale)
+                            sched_overhead, sched_scale, train_step)
     suites = [
         ("sched_overhead", sched_overhead.run),        # Fig 5a
         # --skip-slow trims the scale grid to its small corner (the full
@@ -31,21 +37,38 @@ def main() -> None:
         ("jct_traces", jct_traces.run),                # Fig 5b
         ("roofline", roofline.run),                    # deliverable g
         ("kernels", kernels.run),
+        # measured/roofline MFU calibration (quick mode skips the jitted
+        # train-step compiles and emits roofline rows only)
+        ("train_step", lambda: train_step.run(quick=args.skip_slow)),
     ]
     if not args.skip_slow:
         suites.insert(0, ("memory_accuracy", memory_accuracy.run))  # Fig 6
 
     failed = []
+    rows = []
     print("name,us_per_call,derived")
     for name, fn in suites:
         if args.only and not name.startswith(args.only):
             continue
         try:
             for row_name, us, derived in fn():
+                rows.append({"name": row_name, "us_per_call": us,
+                             "derived": derived})
                 print(f"{row_name},{us:.1f},{derived}")
         except Exception as e:  # noqa: BLE001
             failed.append((name, e))
             traceback.print_exc()
+    if args.json:
+        import jax
+        payload = {
+            "backend": jax.default_backend(),
+            "skip_slow": args.skip_slow,
+            "failed_suites": [n for n, _ in failed],
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print(f"# wrote {len(rows)} rows to {args.json}", file=sys.stderr)
     if failed:
         print(f"# FAILED suites: {[n for n, _ in failed]}", file=sys.stderr)
         raise SystemExit(1)

@@ -1,0 +1,134 @@
+"""Train-step throughput benchmark — the measured side of MFU calibration.
+
+Times the fully-jitted (buffer-donated) train step of a reduced config on
+the local backend and converts wall time to achieved model-FLOPs; when a
+catalog ``DeviceType`` is not physically present (every device on this CPU
+container), ``core.calibration.roofline_mfu`` supplies the analytic
+fallback.  ``calibrate()`` assembles the per-(device_type, family) MFU
+table that ``core.calibration.enable`` installs for MARP's plan ranking.
+
+    PYTHONPATH=src python -m benchmarks.train_step
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ARCHS, smoke_config
+from repro.core import calibration
+from repro.core.devices import DEVICE_TYPES
+from repro.core.marp import _active_analytic
+
+#: jax device_kind substrings -> catalog DeviceType (TPU hardware only;
+#: CPU/GPU containers fall back to the roofline table).
+_DEVICE_KIND_MAP = (
+    ("v5 lite", "v5e"), ("v5litepod", "v5e"), ("v5e", "v5e"),
+    ("v5p", "v5p"), ("v4", "v4"),
+)
+
+
+def local_device_type() -> Optional[str]:
+    """Catalog name of the local accelerator, or None when not cataloged."""
+    kind = jax.devices()[0].device_kind.lower()
+    for sub, name in _DEVICE_KIND_MAP:
+        if sub in kind:
+            return name
+    return None
+
+
+def measure_step(arch: str = "gpt2-350m", *, batch: int = 4, seq: int = 128,
+                 steps: int = 3) -> Dict[str, float]:
+    """Wall-time one jitted+donated train step of the arch's smoke config.
+
+    Returns arch/family plus step_time_s, tokens_per_s, and achieved
+    model-FLOP/s (6·N_active·tokens / wall) for MFU conversion.
+    """
+    from repro.data import SyntheticTokens
+    from repro.launch.mesh import make_plan_mesh
+    from repro.train import build_train_step, make_train_state
+
+    cfg = smoke_config(arch)
+    tc = TrainConfig(global_batch=batch, seq_len=seq, steps=max(steps, 2),
+                     warmup_steps=1)
+    mesh = make_plan_mesh(1, 1)
+    state = make_train_state(cfg, tc, jax.random.PRNGKey(0))
+    step, _ = build_train_step(cfg, tc, mesh, batch, seq, jit=True)
+    it = iter(SyntheticTokens(cfg, batch, seq, seed=0))
+    batches = [{k: jnp.asarray(v) for k, v in next(it).items()
+                if k in ("tokens", "labels", "modal_embeds")}
+               for _ in range(steps + 1)]
+    state, metrics = step(state, batches[0])          # compile + warm
+    jax.block_until_ready(metrics)
+    t0 = time.perf_counter()
+    for b in batches[1:]:
+        state, metrics = step(state, b)
+    jax.block_until_ready(metrics)
+    wall = (time.perf_counter() - t0) / steps
+    tokens = batch * seq
+    return {
+        "arch": arch, "family": ARCHS[arch].family, "step_time_s": wall,
+        "global_batch": batch, "seq": seq,
+        "tokens_per_s": tokens / wall,
+        "achieved_flops": 6.0 * _active_analytic(cfg) * tokens / wall,
+    }
+
+
+def calibrate(device_types=None, families=None, *,
+              measure: bool = True) -> calibration.MFUTable:
+    """The full measured/roofline MFU table.
+
+    Roofline entries for every requested (device_type, family); when the
+    local accelerator is a cataloged TPU and ``measure`` is set, its
+    entries are overwritten with measured MFU from real train steps.
+    """
+    table = calibration.roofline_table(device_types, families)
+    local = local_device_type()
+    if measure and local and (device_types is None or local in device_types):
+        dev = DEVICE_TYPES[local]
+        # same per-family representative as the roofline table, so the
+        # measured entry replaces a roofline entry for the same model
+        fams = {fam: cfg.name
+                for fam, cfg in calibration.family_representatives().items()}
+        if families is not None:
+            fams = {f: a for f, a in fams.items() if f in families}
+        rows = []
+        for fam, arch in sorted(fams.items()):
+            m = measure_step(arch)
+            mfu = calibration.measured_mfu(
+                m["step_time_s"], smoke_config(arch), m["global_batch"],
+                m["seq"], 1, dev)
+            rows.append({"device_type": local, "family": fam, "mfu": mfu})
+        table.update(calibration.table_from_measurements(rows))
+    return table
+
+
+def run(quick: bool = False) -> List[Tuple[str, float, float]]:
+    rows: List[Tuple[str, float, float]] = []
+    backend = jax.default_backend()
+    if not quick:
+        for arch in ("gpt2-350m", "mamba2-130m"):
+            m = measure_step(arch)
+            rows.append((f"train_step/{arch}_smoke_{backend}",
+                         m["step_time_s"] * 1e6,
+                         round(m["tokens_per_s"], 1)))
+    # calibration table (roofline here; measured on TPU hardware)
+    local = local_device_type()
+    rows.append(("train_step/local_device_type", 0.0, local or "uncataloged"))
+    table = calibrate(device_types=["v5e", "A100-80G", "RTX3090"],
+                      measure=not quick)
+    for (dt, fam), mfu in sorted(table.items()):
+        rows.append((f"train_step/mfu/{dt}/{fam}", 0.0, round(mfu, 4)))
+    return rows
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

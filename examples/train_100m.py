@@ -52,8 +52,8 @@ def main():
     state = jax.device_put(state, jax.tree.map(
         lambda s: NamedSharding(mesh, s), sspec,
         is_leaf=lambda x: isinstance(x, P)))
-    step_fn, _ = build_train_step(MODEL, tc, mesh, args.batch, args.seq)
-    step_jit = jax.jit(step_fn, donate_argnums=(0,))
+    step_jit, _ = build_train_step(MODEL, tc, mesh, args.batch, args.seq,
+                                   jit=True)
 
     data = iter(SyntheticTokens(MODEL, args.batch, args.seq, seed=0))
     losses = []

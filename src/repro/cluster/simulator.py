@@ -30,6 +30,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
+from repro.core import calibration
 from repro.core.devices import DEVICE_TYPES
 from repro.core.has import Node
 from repro.core.lifecycle import (  # noqa: F401  (re-exported compat names)
@@ -95,7 +96,11 @@ def job_rate(job: Job, placements: Sequence[Tuple[str, int]],
     dev = DEVICE_TYPES[first_type]
     n_active = _active_analytic(job.cfg)
     flops_per_sample = 6.0 * n_active * job.seq_len
-    eff = 0.45 * _tp_efficiency(t, dev) * _dp_efficiency(d)
+    # same MFU source as MARP's ranking (calibration table when enabled,
+    # the seed's 0.45 otherwise) so plan priority stays consistent with
+    # the simulated world
+    eff = calibration.mfu_for(job.cfg.family, dev.name) \
+        * _tp_efficiency(t, dev) * _dp_efficiency(d)
     if len({nid for nid, _ in placements}) > 1:
         eff *= 0.75                          # cross-node penalty
     return n_devices * slowest * eff / flops_per_sample

@@ -19,6 +19,7 @@ from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
+from repro.core import calibration
 from repro.core import memory_model as mm
 from repro.core.devices import DEVICE_TYPES, DeviceType
 
@@ -58,13 +59,21 @@ def _dp_efficiency(d: int) -> float:
 
 
 def plan_throughput_score(cfg: ModelConfig, dev: DeviceType, d: int, t: int,
-                          global_batch: int, seq: int) -> float:
+                          global_batch: int, seq: int, *,
+                          mfu: Optional[float] = None) -> float:
     """Estimated job samples/s — the paper ranks plans by training
     efficiency, so the fastest feasible plan sits at the forefront; under
-    contention HAS naturally falls through to the smaller ones."""
+    contention HAS naturally falls through to the smaller ones.
+
+    ``mfu`` defaults to the calibration table (measured / roofline per
+    (device_type, family) — ``core.calibration``); with calibration off
+    that is the seed's 45% constant, keeping the ranking golden-identical.
+    """
     n_active = _active_analytic(cfg)
     flops_per_sample = 6.0 * n_active * seq
-    eff = 0.45 * _tp_efficiency(t, dev) * _dp_efficiency(d)   # 45% MFU baseline
+    if mfu is None:
+        mfu = calibration.mfu_for(cfg.family, dev.name)
+    eff = mfu * _tp_efficiency(t, dev) * _dp_efficiency(d)
     total = dev.flops * eff * d * t
     # Contention-aware efficiency ranking: nearly goodput-per-card (beta=0.9)
     # so the forefront plans are efficient under load, while ties still break
@@ -95,14 +104,18 @@ def predict_plans(cfg: ModelConfig, global_batch: int, seq: int, *,
     generalised per-family model (DESIGN.md §4).
 
     The sweep is memoized on ``(cfg, batch, seq, device_types, zero, mode,
-    max_devices, max_t)`` — trace workloads draw from a handful of model
-    configs, so in the scheduling hot path this is almost always a cache hit.
+    max_devices, max_t, calibration.cache_token())`` — trace workloads draw
+    from a handful of model configs, so in the scheduling hot path this is
+    almost always a cache hit.  The calibration token invalidates cached
+    rankings whenever the MFU table is (re-)enabled; with calibration off
+    the token is constant and the ranking is the seed's.
     ``ResourcePlan`` is frozen, so cached plans are shared safely; the list
     itself is fresh per call so callers may sort/slice it.
     """
     dts = tuple(device_types) if device_types else tuple(DEVICE_TYPES)
     return list(_predict_plans_cached(cfg, global_batch, seq, dts,
-                                      max_devices, zero, mode, max_t))
+                                      max_devices, zero, mode, max_t,
+                                      calibration.cache_token()))
 
 
 def predict_plans_shared(cfg: ModelConfig, global_batch: int, seq: int, *,
@@ -117,13 +130,15 @@ def predict_plans_shared(cfg: ModelConfig, global_batch: int, seq: int, *,
     identity — the workload-generation path for the simulator uses this."""
     dts = tuple(device_types) if device_types else tuple(DEVICE_TYPES)
     return _predict_plans_cached(cfg, global_batch, seq, dts,
-                                 max_devices, zero, mode, max_t)
+                                 max_devices, zero, mode, max_t,
+                                 calibration.cache_token())
 
 
 @lru_cache(maxsize=4096)
 def _predict_plans_cached(cfg: ModelConfig, global_batch: int, seq: int,
                           device_types: Tuple[str, ...], max_devices: int,
-                          zero: int, mode: str, max_t: int
+                          zero: int, mode: str, max_t: int,
+                          cal_token: Tuple = ("off",)
                           ) -> Tuple[ResourcePlan, ...]:
     plans: List[ResourcePlan] = []
     d_candidates = [x for x in _pow2_divisors(global_batch) if x <= max_devices]

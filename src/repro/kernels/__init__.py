@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Compute hot-spot kernels (flash attention, SSD scan, fused Adam), each
+# shipped as <name>.py (Pallas TPU) + ops.py (jit wrapper) + ref.py (jnp
+# oracle).  ``repro.kernels.dispatch`` is the backend-dispatched registry
+# the production call sites go through: TPU -> Pallas (autotuned blocks),
+# CPU/GPU -> the chunked-jnp reference, overridable via REPRO_KERNELS or
+# dispatch.force().
+from repro.kernels import dispatch  # noqa: F401

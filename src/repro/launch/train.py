@@ -57,8 +57,8 @@ def main(argv=None):
     s_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspec,
                         is_leaf=lambda x: isinstance(x, P))
     state = jax.device_put(state, s_sh)
-    step_fn, n_micro = build_train_step(cfg, tc, mesh, args.batch, args.seq)
-    step_jit = jax.jit(step_fn, donate_argnums=(0,))
+    step_jit, n_micro = build_train_step(cfg, tc, mesh, args.batch, args.seq,
+                                         jit=True)
 
     data = SyntheticTokens(cfg, args.batch, args.seq, seed=tc.seed)
     it = iter(data)

@@ -1,10 +1,11 @@
 """Attention: RoPE, memory-efficient chunked attention (pure jnp, flash-style),
 single-token decode attention, and the GQA / MLA layer implementations.
 
-The chunked implementation is the production CPU/XLA path (the Pallas flash
-kernel in ``repro.kernels.flash_attention`` is the TPU fast path and is
-numerically validated against ``repro.kernels.flash_attention.ref`` which in
-turn matches this module).
+Full-sequence attention goes through ``repro.kernels.dispatch``: on TPU the
+Pallas flash kernel runs (autotuned block sizes); on CPU/GPU the chunked
+implementation below runs, bit-identical to calling it directly.  The Pallas
+kernel is numerically validated against ``repro.kernels.flash_attention.ref``
+which in turn matches this module.
 """
 from __future__ import annotations
 
@@ -16,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import dispatch
 from repro.models.common import dense_init, rms_norm
 from repro.parallel.act import constrain
 
@@ -257,7 +259,7 @@ def gqa_attend_train(cfg: ModelConfig, p: dict, x: jax.Array,
     """Full-sequence (train / prefill) attention.  Returns (out, kv) where kv
     holds the k/v tensors for cache construction during prefill."""
     q, k, v = gqa_project_qkv(cfg, p, x, positions)
-    o = chunked_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    o = dispatch.attention(q, k, v, causal=True, window=cfg.sliding_window)
     o = constrain(o, "batch", "seq", "heads", None)
     out = constrain(jnp.einsum("bshk,hkd->bsd", o, p["wo"]),
                     "batch", "seq", None)
@@ -357,7 +359,7 @@ def mla_attend_train(cfg: ModelConfig, p: dict, x: jax.Array,
     # chunked kernel generic)
     pad = (dn + dr) - dv
     v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad > 0 else v
-    o = chunked_attention(q, k, v_p, causal=True, softmax_scale=scale)
+    o = dispatch.attention(q, k, v_p, causal=True, softmax_scale=scale)
     o = constrain(o[..., :dv], "batch", None, "heads", None)
     out = constrain(jnp.einsum("bshk,hkd->bsd", o, p["wo"]),
                     "batch", None, None)

@@ -1,8 +1,9 @@
 """Mamba2 SSD (state-space duality) block [arXiv:2405.21060].
 
-Chunked SSD algorithm in pure jnp (the model path; the Pallas kernel in
-``repro.kernels.ssd_scan`` is the TPU fast path validated against the same
-math).  Layout follows the Mamba2 reference: in_proj emits [z | xBC | dt],
+The full-sequence scan goes through ``repro.kernels.dispatch``: on TPU the
+Pallas kernel in ``repro.kernels.ssd_scan`` runs; on CPU/GPU the chunked
+pure-jnp ``ssd_chunked`` below runs, bit-identical to the pre-dispatch call.
+Layout follows the Mamba2 reference: in_proj emits [z | xBC | dt],
 a depthwise causal conv over xBC, SSD with scalar-per-head A, gated RMSNorm,
 out_proj.  Single B/C group (n_groups = 1).
 """
@@ -15,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import dispatch
 from repro.models.common import dense_init, gated_rms_norm
 from repro.parallel.act import constrain
 
@@ -149,10 +151,9 @@ def mamba2_forward(cfg: ModelConfig, p: dict, x: jax.Array
     xs = xBC[..., :di].reshape(b, s, h, hp)
     B = xBC[..., di:di + n]
     C = xBC[..., di + n:]
-    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
-    A = -jnp.exp(p["A_log"])
     xs = constrain(xs, "batch", None, "heads_inner", None)
-    y, state = ssd_chunked(xs, dt, A, B, C, p["D"])
+    y, state = dispatch.ssd(xs, dt_raw, p["A_log"], B, C, p["D"],
+                            p["dt_bias"])
     y = constrain(y.reshape(b, s, di), "batch", None, "inner")
     y = gated_rms_norm(y, z, p["norm"], cfg.norm_eps)
     out = constrain(y @ p["out_proj"], "batch", None, None)

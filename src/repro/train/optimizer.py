@@ -1,7 +1,12 @@
 """Mixed-precision Adam matching the paper's 20-byte/param accounting:
 bf16 params (2) + bf16/fp32 grads (2-4 transient) + fp32 master (4) +
 Adam m (4) + v (4).  ZeRO sharding of the fp32 state is applied by the
-caller via PartitionSpecs (sharding.param_specs(zero_data=True))."""
+caller via PartitionSpecs (sharding.param_specs(zero_data=True)).
+
+The per-leaf update goes through ``repro.kernels.dispatch``: the tree is
+flattened and each leaf updated by the resolved ``adam_update`` op — the
+Pallas fused kernel (one VMEM pass over the 20-byte state) on TPU, the
+pure-jnp math (bit-identical to the pre-dispatch loop) on CPU/GPU."""
 from __future__ import annotations
 
 import math
@@ -11,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import TrainConfig
+from repro.kernels import dispatch
 
 
 def lr_at(tc: TrainConfig, step: jax.Array) -> jax.Array:
@@ -45,24 +51,17 @@ def adam_update(tc: TrainConfig, params: Any, opt: Dict[str, Any],
     gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                          for g in jax.tree.leaves(grads)))
 
-    def upd(g, m, v, mp):
-        g = g.astype(jnp.float32)
-        m = tc.beta1 * m + (1.0 - tc.beta1) * g
-        v = tc.beta2 * v + (1.0 - tc.beta2) * jnp.square(g)
-        mhat = m / c1
-        vhat = v / c2
-        # decoupled weight decay on matrices only (ndim >= 2)
-        wd = tc.weight_decay if mp.ndim >= 2 else 0.0
-        new_mp = mp - lr * (mhat / (jnp.sqrt(vhat) + tc.eps) + wd * mp)
-        return m, v, new_mp
-
     flat_g, treedef = jax.tree.flatten(grads)
     flat_m = treedef.flatten_up_to(opt["m"])
     flat_v = treedef.flatten_up_to(opt["v"])
     flat_p = treedef.flatten_up_to(opt["master"])
     new_m, new_v, new_master = [], [], []
     for g, m, v, mp in zip(flat_g, flat_m, flat_v, flat_p):
-        m2, v2, p2 = upd(g, m, v, mp)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = tc.weight_decay if mp.ndim >= 2 else 0.0
+        m2, v2, p2 = dispatch.adam_update_leaf(
+            g, m, v, mp, lr=lr, beta1=tc.beta1, beta2=tc.beta2,
+            eps=tc.eps, wd=wd, c1=c1, c2=c2)
         new_m.append(m2)
         new_v.append(v2)
         new_master.append(p2)

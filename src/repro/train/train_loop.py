@@ -59,9 +59,15 @@ def state_specs(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh,
 
 
 def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh,
-                     global_batch: int, seq_len: int):
-    """Returns step(state, batch) -> (state, metrics); jit with the specs
-    from state_specs / sharding.batch_specs."""
+                     global_batch: int, seq_len: int, *, jit: bool = False):
+    """Returns step(state, batch) -> (state, metrics).
+
+    jit=True returns the step already jitted with the state buffers donated
+    (argnums 0): params/opt/m/v are rewritten in place instead of
+    double-buffered, halving the optimizer-state working set.  jit=False
+    (default) returns the traceable step for callers that lower it with
+    explicit shardings (launch.dryrun) or wrap it themselves.
+    """
     n_micro = resolve_microbatches(tc, global_batch, mesh)
     daxes = sh.data_axes(mesh)
     dax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
@@ -118,4 +124,6 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh,
         metrics = {"loss": loss_sum / n_micro, "grad_norm": gnorm}
         return new_state, metrics
 
+    if jit:
+        step = jax.jit(step, donate_argnums=(0,))
     return step, n_micro

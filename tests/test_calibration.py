@@ -1,0 +1,137 @@
+"""Calibration guards: off == seed constant, roofline sanity, measurement
+round trip, and MARP re-ranking under a calibrated table (tier-1-safe — no
+jitted train steps, just the analytic paths)."""
+import math
+
+import pytest
+
+from repro.cluster.simulator import job_rate
+from repro.configs.registry import ARCHS
+from repro.core import calibration as cal
+from repro.core import marp
+from repro.core.devices import DEVICE_TYPES
+
+
+@pytest.fixture(autouse=True)
+def _calibration_off():
+    """Every test starts and ends with calibration disabled."""
+    cal.disable()
+    yield
+    cal.disable()
+
+
+def test_off_is_seed_constant():
+    assert not cal.is_enabled()
+    assert cal.cache_token() == ("off",)
+    assert cal.mfu_for("dense", "A100-40G") == cal.DEFAULT_MFU == 0.45
+    cal.enable({("A100-40G", "dense"): 0.9})
+    assert cal.mfu_for("dense", "A100-40G") == 0.9
+    assert cal.mfu_for("moe", "A100-40G") == cal.DEFAULT_MFU   # fallback
+    cal.disable()
+    assert cal.cache_token() == ("off",)                       # stable token
+    assert cal.mfu_for("dense", "A100-40G") == 0.45
+
+
+def test_wildcard_family_lookup():
+    cal.enable({("v5e", "*"): 0.3, ("v5e", "ssm"): 0.55})
+    assert cal.mfu_for("ssm", "v5e") == 0.55
+    assert cal.mfu_for("dense", "v5e") == 0.3                  # wildcard
+    assert cal.mfu_for("dense", "v4") == cal.DEFAULT_MFU
+
+
+def test_roofline_mfu_sane_and_device_dependent():
+    table = cal.roofline_table(["v5e", "A100-80G", "RTX2080Ti"])
+    assert set(dt for dt, _ in table) == {"v5e", "A100-80G", "RTX2080Ti"}
+    fams = {fam for _, fam in table}
+    assert {"dense", "moe", "ssm", "hybrid"} <= fams
+    for v in table.values():
+        assert cal.MIN_MFU <= v <= cal.ROOFLINE_ATTAINABLE
+    # memory-bound families are capped harder on high-ridge devices: the
+    # hybrid rep on v5e (ridge 241 flop/B) attains less of peak than on the
+    # low-ridge RTX2080Ti (ridge 44 flop/B)
+    assert table[("v5e", "hybrid")] < table[("RTX2080Ti", "hybrid")]
+
+
+def test_measured_mfu_arithmetic():
+    cfg = ARCHS["gpt2-350m"]
+    dev = DEVICE_TYPES["A100-40G"]
+    flops = 6.0 * marp._active_analytic(cfg) * 32 * 1024
+    # a step exactly at 30% of one device's peak
+    wall = flops / (0.30 * dev.flops)
+    got = cal.measured_mfu(wall, cfg, 32, 1024, 1, dev)
+    assert math.isclose(got, 0.30, rel_tol=1e-9)
+    # clamped into (0, 1) territory
+    assert cal.measured_mfu(1e9, cfg, 32, 1024, 1, dev) == cal.MIN_MFU
+
+
+def test_table_from_measurements_averages_and_clamps():
+    rows = [
+        {"device_type": "v5e", "family": "dense", "mfu": 0.2},
+        {"device_type": "v5e", "family": "dense", "mfu": 0.4},
+        {"device_type": "v4", "family": "ssm", "mfu": 5.0},     # garbage in
+    ]
+    table = cal.table_from_measurements(rows)
+    assert math.isclose(table[("v5e", "dense")], 0.3)
+    assert table[("v4", "ssm")] == cal.MAX_MFU                  # clamped
+
+
+def test_save_load_round_trip(tmp_path):
+    table = cal.roofline_table(["v5e", "A100-40G"])
+    path = str(tmp_path / "mfu.json")
+    cal.save(path, table)
+    assert cal.load(path) == table
+
+
+# ------------------------------------------------- MARP re-ranking guard ---
+
+def test_marp_reranks_with_calibration_and_restores_golden():
+    """The acceptance loop: calibration on re-ranks plans with the table's
+    MFU; calibration off is bit-identical to the seed ranking (including
+    the shared-tuple identity dedupe from PR 1)."""
+    cfg = ARCHS["gpt2-350m"]
+    kw = dict(device_types=["A100-40G", "RTX3090"], max_devices=64)
+    base = marp.predict_plans(cfg, 32, 1024, **kw)
+    shared_before = marp.predict_plans_shared(cfg, 32, 1024, **kw)
+    assert base[0].device_type == "A100-40G"          # faster card leads
+    # extreme measured table: the A100s are badly congested, the 3090s great
+    with cal.calibrated({("A100-40G", "*"): 0.05, ("RTX3090", "*"): 0.9}):
+        flipped = marp.predict_plans(cfg, 32, 1024, **kw)
+        assert flipped != base
+        assert flipped[0].device_type == "RTX3090"
+        # scores actually consumed the table
+        s = marp.plan_throughput_score(cfg, DEVICE_TYPES["RTX3090"], 1, 1,
+                                       32, 1024)
+        s_forced = marp.plan_throughput_score(cfg, DEVICE_TYPES["RTX3090"],
+                                              1, 1, 32, 1024, mfu=0.9)
+        assert s == s_forced
+    after = marp.predict_plans(cfg, 32, 1024, **kw)
+    assert after == base
+    # identical off-token -> the memoized tuple is the *same object*
+    assert marp.predict_plans_shared(cfg, 32, 1024, **kw) is shared_before
+
+
+def test_roofline_table_feeds_marp_end_to_end():
+    """Calibration round trip with the real roofline source: enable the
+    analytic table, rank across heterogeneous devices, disable, golden."""
+    cfg = ARCHS["jamba-1.5-large-398b"]               # memory-bound family
+    kw = dict(device_types=["v5e", "RTX2080Ti", "A100-80G"])
+    base = marp.predict_plans(cfg, 64, 2048, **kw)
+    table = cal.roofline_table(["v5e", "RTX2080Ti", "A100-80G"])
+    with cal.calibrated(table):
+        ranked = marp.predict_plans(cfg, 64, 2048, **kw)
+        assert [p.score for p in ranked] != [p.score for p in base]
+    assert marp.predict_plans(cfg, 64, 2048, **kw) == base
+
+
+def test_job_rate_consistent_with_calibration():
+    """The simulator's rate model uses the same MFU source as the ranking."""
+    from repro.cluster.traces import new_workload
+    from repro.core.has import Node
+    jobs = new_workload(1, ["A100-40G"], seed=3)
+    job = jobs[0]
+    nodes = {"n0": Node("n0", "A100-40G", 40 * 1024 ** 3, 8, 8)}
+    base = job_rate(job, (("n0", 2),), nodes, 2, 1)
+    with cal.calibrated({("A100-40G", "*"): 0.9}):
+        fast = job_rate(job, (("n0", 2),), nodes, 2, 1)
+    assert math.isclose(fast / base, 0.9 / 0.45, rel_tol=1e-9)
+    assert job_rate(job, (("n0", 2),), nodes, 2, 1) == base

@@ -473,6 +473,46 @@ def test_predict_plans_cache_hit_and_isolation():
     assert predict_plans(cfg, 32, 1024, device_types=["A100-40G"]) == p2
 
 
+def test_plan_score_calibration_off_identical_to_seed():
+    """Seed-verbatim scoring: with calibration off, plan_throughput_score
+    must reproduce the seed's hardcoded 45%-MFU formula bit-for-bit."""
+    from repro.core import calibration
+    from repro.core.marp import (_active_analytic, _dp_efficiency,
+                                 _tp_efficiency, plan_throughput_score)
+    calibration.disable()
+    for arch in ("gpt2-350m", "mixtral-8x22b", "mamba2-130m"):
+        cfg = ARCHS[arch]
+        for dt in ("A100-40G", "v5e", "RTX2080Ti"):
+            dev = DEVICE_TYPES[dt]
+            for d, t in ((1, 1), (4, 2), (16, 1), (2, 8)):
+                n_active = _active_analytic(cfg)
+                flops_per_sample = 6.0 * n_active * 1024
+                eff = 0.45 * _tp_efficiency(t, dev) * _dp_efficiency(d)
+                want = dev.flops * eff * d * t / flops_per_sample \
+                    / ((d * t) ** 0.9)
+                got = plan_throughput_score(cfg, dev, d, t, 32, 1024)
+                assert got == want, (arch, dt, d, t)
+
+
+def test_predict_plans_calibration_round_trip_stays_golden():
+    """Enable/disable cycles must leave the calibration-off ranking (and
+    the shared memoized tuple identity) bit-identical to the seed."""
+    from repro.core import calibration
+    from repro.core.marp import predict_plans_shared
+    calibration.disable()
+    cfg = ARCHS["gpt2-350m"]
+    kw = dict(device_types=["A100-40G", "A100-80G", "RTX3090"])
+    base = predict_plans(cfg, 32, 1024, **kw)
+    shared = predict_plans_shared(cfg, 32, 1024, **kw)
+    calibration.enable({("RTX3090", "*"): 0.9, ("A100-40G", "*"): 0.1})
+    try:
+        assert predict_plans(cfg, 32, 1024, **kw) != base
+    finally:
+        calibration.disable()
+    assert predict_plans(cfg, 32, 1024, **kw) == base
+    assert predict_plans_shared(cfg, 32, 1024, **kw) is shared
+
+
 def test_predict_plans_cache_key_invalidation():
     """Every key component must reach the cache key: changing it changes
     the result (or at least misses the cache)."""
