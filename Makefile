@@ -6,11 +6,14 @@
 #   make bench        full benchmark grid (tens of seconds)
 #   make bench-json   full grid, rows recorded to BENCH_<date>.json
 #                     (the perf trajectory; commit the files that matter)
+#   make memcheck     regenerate experiments/memcheck JSONs (XLA compiles;
+#                     both ZeRO stages — they seed the memory feedback
+#                     plane at import, so commit the refreshed files)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 tier1-fast bench-smoke bench bench-json
+.PHONY: tier1 tier1-fast bench-smoke bench bench-json memcheck
 
 tier1:
 	$(PY) -m pytest -x -q
@@ -26,3 +29,7 @@ bench:
 
 bench-json:
 	$(PY) -m benchmarks.run --json BENCH_$$(date +%Y%m%d).json
+
+memcheck:
+	$(PY) -m repro.launch.memcheck --zero 0 --force
+	$(PY) -m repro.launch.memcheck --zero 1 --force

@@ -1,7 +1,10 @@
 """Fig 6: MARP memory-prediction accuracy vs XLA ground truth.
 
 Runs ``repro.launch.memcheck`` in a subprocess (it needs its own
-XLA_FLAGS device count) and summarises per-combo accuracies."""
+XLA_FLAGS device count) and summarises per-combo accuracies — for both
+ZeRO stages the trainer supports (the committed
+``experiments/memcheck/memcheck_zero{0,1}.json`` make this instant on
+CPU-only CI; ``make memcheck`` regenerates them)."""
 from __future__ import annotations
 
 import json
@@ -12,35 +15,54 @@ import sys
 HERE = os.path.dirname(__file__)
 OUT = os.path.join(HERE, "../experiments/memcheck")
 
+ZERO_STAGES = (0, 1)
+
 
 def ensure(zero: int = 0, force: bool = False):
+    """Load (or regenerate) one memcheck JSON; [] when no usable data
+    exists — callers must not assume rows exist.  A failed regeneration
+    falls back to whatever valid file is already on disk (the committed
+    corpus must survive a broken local toolchain)."""
     path = os.path.join(OUT, f"memcheck_zero{zero}.json")
     if force or not os.path.exists(path):
         env = dict(os.environ)
         env["PYTHONPATH"] = os.path.join(HERE, "../src")
         env.pop("XLA_FLAGS", None)
-        subprocess.run([sys.executable, "-m", "repro.launch.memcheck",
-                        "--zero", str(zero)] + (["--force"] if force else []),
-                       check=True, env=env)
-    with open(path) as f:
-        return json.load(f)
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.memcheck",
+             "--zero", str(zero)] + (["--force"] if force else []),
+            env=env)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return []
+    return data if isinstance(data, list) else []
 
 
 def run():
     rows = []
-    data = ensure(zero=0)
-    accs_e, accs_p = [], []
-    for r in data:
-        tag = f"{r['arch']}/b{r['batch']}d{r['d']}t{r['t']}"
-        rows.append((f"memory_accuracy/{tag}/exact", 0.0, r["acc_exact"]))
-        rows.append((f"memory_accuracy/{tag}/paper", 0.0, r["acc_paper"]))
-        accs_e.append(r["acc_exact"])
-        accs_p.append(r["acc_paper"])
-    rows.append(("memory_accuracy/mean_exact", 0.0,
-                 round(sum(accs_e) / len(accs_e), 4)))
-    rows.append(("memory_accuracy/min_exact", 0.0, round(min(accs_e), 4)))
-    rows.append(("memory_accuracy/mean_paper", 0.0,
-                 round(sum(accs_p) / len(accs_p), 4)))
+    for zero in ZERO_STAGES:
+        data = ensure(zero=zero)
+        if not data:
+            # failed/empty memcheck must degrade to a visible row, not a
+            # ZeroDivisionError that kills the whole benchmark driver
+            rows.append((f"memory_accuracy/z{zero}/missing", 0.0, 0))
+            continue
+        accs_e, accs_p = [], []
+        # zero=0 rows keep their pre-PR-4 names (perf-trajectory continuity)
+        prefix = "memory_accuracy" if zero == 0 else f"memory_accuracy/z{zero}"
+        for r in data:
+            tag = f"{r['arch']}/b{r['batch']}d{r['d']}t{r['t']}"
+            rows.append((f"{prefix}/{tag}/exact", 0.0, r["acc_exact"]))
+            rows.append((f"{prefix}/{tag}/paper", 0.0, r["acc_paper"]))
+            accs_e.append(r["acc_exact"])
+            accs_p.append(r["acc_paper"])
+        rows.append((f"{prefix}/mean_exact", 0.0,
+                     round(sum(accs_e) / len(accs_e), 4)))
+        rows.append((f"{prefix}/min_exact", 0.0, round(min(accs_e), 4)))
+        rows.append((f"{prefix}/mean_paper", 0.0,
+                     round(sum(accs_p) / len(accs_p), 4)))
     return rows
 
 

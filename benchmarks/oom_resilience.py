@@ -1,0 +1,131 @@
+"""OOM resilience: memory feedback plane on vs off under misprediction.
+
+For each (cluster size, misprediction severity) cell: generate a contended
+NewWorkload-style trace, inject deterministic per-job-class true-peak
+multipliers (``traces.misprediction_oracle`` — the tail outside the
+paper's "92% accuracy" claim), and simulate twice with identical jobs:
+
+* **static** — the seed behaviour: global 0.92 margin, no learning.  A
+  mispredicted class OOMs, requeues onto the *same* plan, and crash-loops
+  until ``max_oom_retries`` abandons the job.
+* **feedback** — ``core.memtrace`` enabled: the first OOM of a class feeds
+  its observed peak back, the corrected prediction excludes the doomed
+  placement, and the requeued job lands on the next satisfiable plan with
+  headroom.
+
+Rows report OOM counts, *repeat* OOMs (a job re-dying on a (device type,
+shape-bucket) class it already died on — the quantity the feedback loop
+drives to zero), abandoned jobs, and the JCT comparison:
+
+    oom_resilience/n<nodes>_s<sev%>,<us_per_call>,oom=<off>-><on>_repeat=
+        <off>-><on>_failed=<off>-><on>_jct=<off>s-><on>s_impr=<pct>%
+
+    PYTHONPATH=src python -m benchmarks.oom_resilience [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import time
+
+from benchmarks.sched_scale import make_scaled_cluster
+from repro.cluster.schedulers import FrenzyScheduler
+from repro.cluster.simulator import SimResult, simulate
+from repro.cluster.traces import misprediction_oracle, scale_workload
+from repro.core import memtrace
+from repro.core.marp import predict_plans_shared
+
+# (n_nodes, n_jobs, mean_interarrival_s, mean_minutes): contended (same
+# regime as benchmarks/elastic_churn) so the capacity a crash-looping job
+# wastes shows up in everyone else's queueing delay
+FULL_GRID = [(100, 1_000, 1.0, 30.0), (1_000, 5_000, 0.1, 30.0)]
+QUICK_GRID = [(100, 1_000, 1.0, 30.0)]
+FULL_SEVERITIES = [0.25, 0.5, 1.0]
+QUICK_SEVERITIES = [0.5]
+
+#: fraction of job classes with a badly mispredicted peak (the tail)
+MISPREDICTED_FRAC = 0.2
+
+
+def count_repeat_ooms(res: SimResult) -> int:
+    """OOM events where the job had already died on the same
+    (device_type, shape-bucket) class — with feedback on, the corrected
+    prediction makes these structurally impossible."""
+    seen = set()
+    repeats = 0
+    for _, job_id, device_type, pred, _ in res.oom_log:
+        key = (job_id, device_type, memtrace.shape_bucket(pred))
+        if key in seen:
+            repeats += 1
+        seen.add(key)
+    return repeats
+
+
+def run(quick: bool = False):
+    rows = []
+    grid = QUICK_GRID if quick else FULL_GRID
+    severities = QUICK_SEVERITIES if quick else FULL_SEVERITIES
+    for n_nodes, n_jobs, interarrival, mean_minutes in grid:
+        nodes = make_scaled_cluster(n_nodes)
+        types = sorted({n.device_type for n in nodes})
+
+        def replan(job):
+            return predict_plans_shared(job.cfg, job.global_batch,
+                                        job.seq_len,
+                                        device_types=tuple(types),
+                                        max_devices=64)
+
+        jobs = scale_workload(n_jobs, types, seed=47,
+                              mean_interarrival=interarrival,
+                              mean_minutes=mean_minutes)
+        for severity in severities:
+            results = {}
+            for arm in ("static", "feedback"):
+                # each arm starts from a pristine plane so the comparison
+                # is clean: the static arm never learns, the feedback arm
+                # learns only from its own OOMs
+                memtrace.reset()
+                if arm == "feedback":
+                    memtrace.enable()
+                oracle = misprediction_oracle(severity=severity,
+                                              frac=MISPREDICTED_FRAC,
+                                              seed=53)
+                t0 = time.perf_counter()
+                results[arm] = simulate(
+                    copy.deepcopy(jobs), copy.deepcopy(nodes),
+                    FrenzyScheduler(), charge_overhead=False,
+                    oom_check_fn=oracle, replan_fn=replan)
+                results[arm + "_wall"] = time.perf_counter() - t0
+                memtrace.reset()
+            off, on = results["static"], results["feedback"]
+            per_call_us = (on.sched_time_s / max(on.sched_calls, 1)) * 1e6
+            impr = (off.avg_jct - on.avg_jct) / off.avg_jct * 100.0
+            # avg_jct averages *finished* jobs: surface abandoned jobs so
+            # an improvement is never an artifact of differing job sets
+            unfin = f"_unfin={off.unfinished}/{on.unfinished}" \
+                if off.unfinished or on.unfinished else ""
+            rows.append((
+                f"oom_resilience/n{n_nodes}_s{int(severity * 100)}",
+                per_call_us,
+                f"oom={off.ooms}->{on.ooms}"
+                f"_repeat={count_repeat_ooms(off)}->{count_repeat_ooms(on)}"
+                f"_failed={off.oom_failures}->{on.oom_failures}"
+                f"_jct={off.avg_jct:.0f}s->{on.avg_jct:.0f}s"
+                f"_impr={impr:.1f}%{unfin}"
+                f"_wall={results['feedback_wall']:.2f}s"))
+    # restore the committed measured corpus the resets wiped (other suites
+    # and interactive sessions expect the import-time seeding)
+    memtrace.seed_from_experiments()
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    for name, us, derived in run(quick=args.quick):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,8 +24,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (elastic_churn, jct_newworkload, jct_traces,
-                            kernels, memory_accuracy, roofline,
-                            sched_overhead, sched_scale, train_step)
+                            kernels, memory_accuracy, oom_resilience,
+                            roofline, sched_overhead, sched_scale,
+                            train_step)
     suites = [
         ("sched_overhead", sched_overhead.run),        # Fig 5a
         # --skip-slow trims the scale grid to its small corner (the full
@@ -33,6 +34,8 @@ def main() -> None:
         ("sched_scale", lambda: sched_scale.run(quick=args.skip_slow)),
         # elastic reallocation vs static under node churn (lifecycle engine)
         ("elastic_churn", lambda: elastic_churn.run(quick=args.skip_slow)),
+        # memory feedback plane vs static margin under misprediction
+        ("oom_resilience", lambda: oom_resilience.run(quick=args.skip_slow)),
         ("jct_new", jct_newworkload.run),              # Fig 4
         ("jct_traces", jct_traces.run),                # Fig 5b
         ("roofline", roofline.run),                    # deliverable g

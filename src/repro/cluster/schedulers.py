@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
+from repro.core import calibration
 from repro.core.devices import DEVICE_TYPES
 from repro.core.lifecycle import (HASAdmission, fifo_order, nodes_map,
                                   snapshot_nodes)
@@ -171,7 +172,11 @@ class SiaScheduler(Scheduler):
                 if dev.mem < plan.min_mem:
                     continue
                 fps = 6.0 * _active_analytic(job.cfg) * job.seq_len
-                rate = (plan.n_devices * dev.flops * 0.45
+                # same MFU source as MARP/job_rate (seed's 0.45 when
+                # calibration is off) so the ILP's goodput objective stays
+                # consistent with the simulated world
+                mfu = calibration.mfu_for(job.cfg.family, plan.device_type)
+                rate = (plan.n_devices * dev.flops * mfu
                         * _tp_efficiency(plan.t, dev)
                         * _dp_efficiency(plan.d) / fps)
                 cj.append((ti, plan.n_devices, plan.d, plan.t, rate))

@@ -34,7 +34,7 @@ from repro.core import calibration
 from repro.core.devices import DEVICE_TYPES
 from repro.core.has import Node
 from repro.core.lifecycle import (  # noqa: F401  (re-exported compat names)
-    ClusterEvent, Job, LifecycleEngine, Scheduler,
+    ClusterEvent, Job, LifecycleEngine, OomCheckFn, ReplanFn, Scheduler,
     DEFAULT_MIGRATION_BANDWIDTH,
 )
 from repro.core.marp import ResourcePlan, _tp_efficiency, _dp_efficiency, \
@@ -53,6 +53,11 @@ class SimResult:
     preemptions: int = 0                    # node-departure requeues
     migrations: int = 0                     # elastic plan upgrades
     unfinished: int = 0                     # jobs never (re)completed
+    ooms: int = 0                           # out-of-memory kills
+    oom_failures: int = 0                   # jobs abandoned after retries
+    #: per-OOM telemetry from the engine: (time, job_id, device_type,
+    #: predicted bytes, observed bytes) — lets benchmarks count repeats
+    oom_log: Sequence[Tuple[float, int, str, float, float]] = ()
 
     @property
     def finished(self) -> List[Job]:
@@ -110,7 +115,10 @@ def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
              scheduler: Scheduler, charge_overhead: bool = True, *,
              cluster_events: Sequence[ClusterEvent] = (),
              elastic: bool = False,
-             migration_bandwidth: float = DEFAULT_MIGRATION_BANDWIDTH
+             migration_bandwidth: float = DEFAULT_MIGRATION_BANDWIDTH,
+             oom_check_fn: OomCheckFn = None,
+             replan_fn: ReplanFn = None,
+             max_oom_retries: int = 8
              ) -> SimResult:
     """Drive the shared lifecycle engine over a trace.
 
@@ -118,23 +126,34 @@ def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
     clock (the paper's Fig 5a overhead feeds its JCT comparison).
     cluster_events: node_join/node_leave/reschedule dynamics (churn/spot).
     elastic: allow running jobs to migrate to better-ranked plans.
+    oom_check_fn: misprediction model (``traces.misprediction_oracle``) —
+    placements whose true peak exceeds device memory die in an ``oom``
+    event, feed the memory feedback plane, and requeue.
+    replan_fn: post-OOM plan re-ranking (against the updated corrector).
     """
     engine = LifecycleEngine(nodes, scheduler,
                              charge_overhead=charge_overhead,
                              elastic=elastic,
                              migration_bandwidth=migration_bandwidth,
+                             oom_check_fn=oom_check_fn,
+                             replan_fn=replan_fn,
+                             max_oom_retries=max_oom_retries,
                              reset=True)
     pool_nodes = engine.pool.nodes
     engine.rate_fn = lambda job, placements, d, t: \
         job_rate(job, placements, pool_nodes, d, t)
     engine.run(jobs, cluster_events)
     unfinished = [j for j in jobs if j.finish_time < 0]
-    if not cluster_events:
-        # static cluster: capacity never shrinks, every job must complete
+    if not cluster_events and engine.oom_count == 0:
+        # static cluster, no OOMs: capacity never shrinks and nothing
+        # crash-loops, so every job must complete
         assert not unfinished, f"{len(unfinished)} jobs never scheduled"
     return SimResult(jobs=list(jobs), sched_time_s=engine.sched_time_s,
                      sched_calls=engine.sched_calls,
                      makespan=engine.makespan,
                      preemptions=engine.preemption_count,
                      migrations=engine.migration_count,
-                     unfinished=len(unfinished))
+                     unfinished=len(unfinished),
+                     ooms=engine.oom_count,
+                     oom_failures=engine.oom_failures,
+                     oom_log=tuple(engine.oom_log))

@@ -10,13 +10,17 @@ Beyond job arrivals, ``churn_schedule`` and ``spot_schedule`` generate
 *cluster* events (``node_leave``/``node_join``) for the lifecycle engine's
 dynamic-availability path: maintenance-style independent churn, and
 spot-market reclamation waves that take out correlated batches of nodes.
+``misprediction_oracle`` injects memory-misprediction noise (the paper's
+"accuracy exceeds 92%" leaves a tail where it doesn't): a deterministic
+per-job-class true-peak multiplier that feeds the lifecycle engine's
+``oom`` events and, through them, the memory feedback plane.
 """
 from __future__ import annotations
 
 import math
 import random
 from dataclasses import replace
-from typing import List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.lifecycle import ClusterEvent, NODE_JOIN, NODE_LEAVE
@@ -182,6 +186,50 @@ def spot_schedule(nodes: Sequence, *, horizon: float, n_waves: int = 3,
                                        node_id=node.node_id))
     events.sort(key=lambda e: (e.time, e.kind, e.node_id))
     return events
+
+
+def misprediction_oracle(*, severity: float = 0.5, frac: float = 0.2,
+                         mild: float = 0.05, seed: int = 0
+                         ) -> Callable:
+    """Memory-misprediction noise for the lifecycle engine's OOM path.
+
+    Every job class ``(model, batch, seq, zero)`` gets a deterministic
+    true-peak multiplier: with probability ``frac`` the class is badly
+    mispredicted (multiplier ``1 + severity`` — the tail outside the
+    paper's 92% accuracy), otherwise mildly noisy (uniform within
+    ``1 ± mild``).  The multiplier is derived from a stable string seed,
+    so identical traces see identical mispredictions across runs and
+    across feedback-on/off arms.
+
+    Returns an ``oom_check_fn(job, placements, pool)``: the true peak is
+    ``plan.pred_bytes * multiplier``; if it exceeds the smallest device
+    memory of the placement, the placement is doomed and the observed
+    peak is returned (else None).  Jobs admitted outside the HAS path
+    (no ``job.plan``) are not modelled.
+    """
+    mults: Dict[Tuple, float] = {}
+
+    def mult_for(job: SimJob) -> float:
+        plan = job.plan
+        key = (job.cfg.name, job.global_batch, job.seq_len, plan.zero)
+        m = mults.get(key)
+        if m is None:
+            rng = random.Random(f"mispred|{seed}|{key!r}")
+            if rng.random() < frac:
+                m = 1.0 + severity
+            else:
+                m = rng.uniform(1.0 - mild, 1.0 + mild)
+            mults[key] = m
+        return m
+
+    def check(job, placements, pool):
+        if job.plan is None or job.cfg is None or not placements:
+            return None
+        true_peak = job.plan.pred_bytes * mult_for(job)
+        mem = min(pool.nodes[nid].mem for nid, _ in placements)
+        return true_peak if true_peak > mem else None
+
+    return check
 
 
 def philly_like(n_jobs: int, device_types: Sequence[str], seed: int = 0

@@ -19,6 +19,14 @@ Typed event set
                 (progress accrued) and requeued with their remaining work;
                 the node leaves the indexed pool.
 ``reschedule``  explicit trigger: re-run admission + the elastic scan.
+``oom``         a running job exceeded device memory: the job is killed,
+                the observed peak is fed back into the memory feedback
+                plane (``core.memtrace`` — so the corrected prediction can
+                never repeat the same OOM), and the job is requeued with
+                its accrued progress onto the next satisfiable plan with
+                headroom (``replan_fn`` re-ranks against the updated
+                corrector).  After ``max_oom_retries`` the job is marked
+                ``failed`` instead of looping.
 
 Elasticity contract
 -------------------
@@ -45,6 +53,7 @@ from dataclasses import dataclass
 from typing import (Callable, Dict, Iterable, List, Optional, Sequence, Set,
                     Tuple, Union)
 
+from repro.core import memtrace
 from repro.core.has import Allocation, ClusterPool, Node
 from repro.core.marp import ResourcePlan
 
@@ -54,6 +63,7 @@ FINISH = "finish"
 NODE_JOIN = "node_join"
 NODE_LEAVE = "node_leave"
 RESCHEDULE = "reschedule"
+OOM = "oom"
 
 #: bytes/s assumed for checkpoint save+restore during migration/preemption
 DEFAULT_MIGRATION_BANDWIDTH = 16 * 2 ** 30
@@ -73,9 +83,10 @@ class Job:
     seq_len: int = 0
     total_samples: int = 1                  # work to do
     plans: Sequence[ResourcePlan] = ()      # MARP's ranked plans
+    plan_mode: str = "exact"                # memory model the plans used
     requested_n: int = 0                    # user-specified count (baselines)
     # lifecycle state
-    state: str = "queued"                   # queued | running | done
+    state: str = "queued"                   # queued | running | done | failed
     start_time: float = -1.0                # first admission (queue_time base)
     finish_time: float = -1.0
     placements: Tuple[Tuple[str, int], ...] = ()
@@ -90,6 +101,7 @@ class Job:
                                             # stale finish events are dropped
     preemptions: int = 0
     migrations: int = 0
+    ooms: int = 0                           # OOM kills of this job
 
     @property
     def queue_time(self) -> float:
@@ -255,6 +267,21 @@ def _record_plan(job: Job, plan: ResourcePlan,
 #: sim rate model: (job, placements, d, t) -> samples/s
 RateFn = Callable[[Job, Tuple[Tuple[str, int], ...], int, int], float]
 
+#: sim OOM model: (job, placements, pool) -> observed peak bytes if this
+#: placement will exceed device memory, else None.  Consulted once per
+#: (re)start; ``cluster.traces.misprediction_oracle`` builds one from a
+#: deterministic per-job-class true-peak multiplier.
+OomCheckFn = Callable[[Job, Tuple[Tuple[str, int], ...], ClusterPool],
+                      Optional[float]]
+
+#: post-OOM replanning: job -> fresh MARP plan ranking (computed against
+#: the updated memtrace corrector, so the OOMed class is excluded)
+ReplanFn = Callable[[Job], Sequence[ResourcePlan]]
+
+#: virtual seconds from (re)start to OOM detection in the sim — memory
+#: peaks within the first steps, so the crash lands early in the run
+DEFAULT_OOM_DETECT_SECONDS = 30.0
+
 
 class LifecycleEngine:
     """One event loop, one admission/restart policy, for both paths.
@@ -280,6 +307,10 @@ class LifecycleEngine:
                  charge_overhead: bool = False,
                  elastic: bool = False,
                  migration_bandwidth: float = DEFAULT_MIGRATION_BANDWIDTH,
+                 oom_check_fn: Optional[OomCheckFn] = None,
+                 replan_fn: Optional[ReplanFn] = None,
+                 oom_detect_seconds: float = DEFAULT_OOM_DETECT_SECONDS,
+                 max_oom_retries: int = 8,
                  reset: bool = False):
         self.pool = ClusterPool(nodes, reset=reset)
         self.scheduler = scheduler if scheduler is not None else HASAdmission()
@@ -288,6 +319,10 @@ class LifecycleEngine:
         self.charge_overhead = charge_overhead
         self.elastic = elastic
         self.migration_bandwidth = migration_bandwidth
+        self.oom_check_fn = oom_check_fn
+        self.replan_fn = replan_fn
+        self.oom_detect_seconds = oom_detect_seconds
+        self.max_oom_retries = max_oom_retries
         self.jobs: Dict[int, Job] = {}
         self.queued: List[Job] = []
         self._min_need = float("inf")       # min over queued of min_devices
@@ -304,6 +339,10 @@ class LifecycleEngine:
         self.sched_calls = 0
         self.preemption_count = 0
         self.migration_count = 0
+        self.oom_count = 0
+        self.oom_failures = 0               # jobs abandoned after retries
+        #: per-OOM telemetry: (time, job_id, device_type, pred, observed)
+        self.oom_log: List[Tuple[float, int, str, float, float]] = []
         self.makespan = 0.0
 
     # ------------------------------------------------------------ live API
@@ -386,6 +425,18 @@ class LifecycleEngine:
             self._run_scheduler(now)
         self._maybe_migrate(now)
 
+    def oom_job(self, job_id: int, observed_bytes: float,
+                now: float = 0.0) -> Optional[Job]:
+        """Live ``oom``: a runner watched the job die on an out-of-memory.
+        Feeds the observed peak into the memory feedback plane, requeues
+        the job with its accrued progress, and re-runs admission (the
+        corrected prediction excludes the placement that just died)."""
+        job = self.jobs.get(job_id)
+        if job is None or job.state != "running":
+            return None
+        self._oom(job, float(observed_bytes), now)
+        return job
+
     # ------------------------------------------------------------- sim API
     def run(self, jobs: Sequence[Job],
             cluster_events: Sequence[ClusterEvent] = ()) -> None:
@@ -421,6 +472,12 @@ class LifecycleEngine:
                 if self.queued and self.pool.total_idle >= self._min_need:
                     self._run_scheduler(now)
                 self._maybe_migrate(now)
+            elif kind == OOM:
+                job, observed = payload
+                if epoch != job.epoch or job.state != "running":
+                    continue                # stale: job migrated/preempted
+                self.makespan = max(self.makespan, now)
+                self._oom(job, observed, now)
             elif kind == NODE_JOIN:
                 self.node_join(payload.node, payload.node_id, now)
             elif kind == NODE_LEAVE:
@@ -469,11 +526,24 @@ class LifecycleEngine:
             resume = start + (self._migration_seconds(job)
                               if job.preemptions else 0.0)
             job.progress_time = resume
-            finish = resume + (job.total_samples - job.samples_done) / job.rate
-            job.finish_time = finish
-            self._seq += 1
-            heapq.heappush(self._events,
-                           (finish, self._seq, FINISH, job, job.epoch))
+            observed = (self.oom_check_fn(job, job.placements, self.pool)
+                        if self.oom_check_fn is not None else None)
+            if observed is not None:
+                # doomed placement: memory peaks within the first steps, so
+                # the job dies shortly after (re)start instead of finishing
+                job.finish_time = -1.0
+                t_oom = resume + self.oom_detect_seconds
+                self._seq += 1
+                heapq.heappush(self._events,
+                               (t_oom, self._seq, OOM, (job, float(observed)),
+                                job.epoch))
+            else:
+                finish = resume \
+                    + (job.total_samples - job.samples_done) / job.rate
+                job.finish_time = finish
+                self._seq += 1
+                heapq.heappush(self._events,
+                               (finish, self._seq, FINISH, job, job.epoch))
         self._track_demotion(job)
 
     def _finish(self, job: Job, now: float) -> None:
@@ -483,6 +553,60 @@ class LifecycleEngine:
         job.finish_time = now
         job.samples_done = float(job.total_samples)
         self._demoted.pop(job.job_id, None)
+
+    def _oom(self, job: Job, observed: float, now: float) -> None:
+        """``oom`` event: kill, feed back, requeue (or fail after retries).
+
+        The observed peak is recorded against the *raw* plan prediction
+        only while the feedback plane is enabled — the static-margin
+        baseline must stay memoryless so on/off comparisons are clean.
+        Progress accrues up to the crash (periodic checkpointing keeps all
+        but the dying step), and the requeued job gets preemption priority
+        plus a fresh plan ranking from ``replan_fn`` — computed against
+        the updated corrector, so the class that just OOMed is no longer
+        deemed feasible on that device class (no-repeat-OOM invariant).
+        """
+        plan = job.plan
+        self.oom_count += 1
+        job.ooms += 1
+        self.oom_log.append((now, job.job_id,
+                             plan.device_type if plan else "",
+                             float(plan.pred_bytes) if plan else 0.0,
+                             float(observed)))
+        if memtrace.is_enabled() and plan is not None and job.cfg is not None:
+            memtrace.record(job.cfg.family, plan.zero, plan.device_type,
+                            plan.pred_bytes, observed, source="oom")
+        self._accrue(job, now)
+        self.pool.release(job.placements)
+        self._unregister(job)
+        job.placements = ()
+        job.rate = 0.0
+        job.finish_time = -1.0
+        job.epoch += 1                      # stale any in-flight finish
+        job.allocation = None
+        job.plan = None
+        job.plan_rank = -1
+        self._demoted.pop(job.job_id, None)
+        if job.ooms > self.max_oom_retries:
+            job.state = "failed"            # crash-looping: stop retrying
+            self.oom_failures += 1
+        else:
+            job.state = "queued"
+            job.preemptions += 1            # checkpoint-restart priority
+            if self.replan_fn is not None and job.cfg is not None:
+                plans = tuple(self.replan_fn(job))
+                if plans:
+                    job.plans = plans
+                else:                       # no device can ever fit it now
+                    job.state = "failed"
+                    self.oom_failures += 1
+        if job.state == "queued":
+            self.queued.append(job)
+            self._min_need = min(self._min_need, job.min_devices)
+        # the released capacity may admit queued work (incl. this job)
+        if self.queued and self.pool.total_idle >= self._min_need:
+            self._run_scheduler(now)
+        self._maybe_migrate(now)
 
     def _preempt(self, job: Job, now: float) -> None:
         """Checkpoint a running job and requeue it with remaining work."""
@@ -542,7 +666,11 @@ class LifecycleEngine:
             done = job.samples_done + max(now - job.progress_time, 0.0) * job.rate
             done = min(done, float(job.total_samples))
             new_finish = now + mig + (job.total_samples - done) / new_rate
-            if new_finish >= job.finish_time:
+            # a doomed placement (finish_time = -1, OOM pending) has an
+            # effectively infinite finish: any surviving migration pays off
+            cur_finish = job.finish_time if job.finish_time >= 0 \
+                else float("inf")
+            if new_finish >= cur_finish:
                 continue                    # migration does not pay off
             # commit: apply new, release old, reschedule the finish
             self.pool.apply(placements)
@@ -558,10 +686,22 @@ class LifecycleEngine:
             job.epoch += 1                  # stale the old finish event
             job.migrations += 1
             self.migration_count += 1
-            job.finish_time = new_finish
+            # the restored placement faces the same OOM exposure a fresh
+            # start would (its old scheduled OOM, if any, just went stale)
+            observed = (self.oom_check_fn(job, job.placements, self.pool)
+                        if self.oom_check_fn is not None else None)
             self._seq += 1
-            heapq.heappush(self._events,
-                           (new_finish, self._seq, FINISH, job, job.epoch))
+            if observed is not None:
+                job.finish_time = -1.0
+                heapq.heappush(self._events,
+                               (now + mig + self.oom_detect_seconds,
+                                self._seq, OOM, (job, float(observed)),
+                                job.epoch))
+            else:
+                job.finish_time = new_finish
+                heapq.heappush(self._events,
+                               (new_finish, self._seq, FINISH, job,
+                                job.epoch))
             migrated = True
             self._track_demotion(job)
         # migrations released their old (often different-class) placements;

@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.configs.base import ModelConfig
 from repro.core import calibration
 from repro.core import memory_model as mm
+from repro.core import memtrace
 from repro.core.devices import DEVICE_TYPES, DeviceType
 
 
@@ -41,7 +42,12 @@ class ResourcePlan:
         return self.min_mem / (1024 ** 3)
 
 
-MEM_SAFETY = 0.92                 # leave headroom for allocator fragmentation
+#: The seed's static headroom for allocator fragmentation.  With the
+#: memory feedback plane enabled (``core.memtrace``), both plan sweeps use
+#: the per-(family, zero, device_type) adaptive margin instead; with it
+#: disabled, ``memtrace.margin_for`` returns exactly this constant and the
+#: rankings are bit-identical to the seed.
+MEM_SAFETY = memtrace.BASE_MARGIN
 
 
 def _tp_efficiency(t: int, dev: DeviceType) -> float:
@@ -104,18 +110,21 @@ def predict_plans(cfg: ModelConfig, global_batch: int, seq: int, *,
     generalised per-family model (DESIGN.md §4).
 
     The sweep is memoized on ``(cfg, batch, seq, device_types, zero, mode,
-    max_devices, max_t, calibration.cache_token())`` — trace workloads draw
-    from a handful of model configs, so in the scheduling hot path this is
-    almost always a cache hit.  The calibration token invalidates cached
-    rankings whenever the MFU table is (re-)enabled; with calibration off
-    the token is constant and the ranking is the seed's.
+    max_devices, max_t, calibration.cache_token(),
+    memtrace.cache_token())`` — trace workloads draw from a handful of
+    model configs, so in the scheduling hot path this is almost always a
+    cache hit.  The calibration token invalidates cached rankings whenever
+    the MFU table is (re-)enabled, the memtrace token whenever the memory
+    feedback plane ingests an observation or is (re-)enabled; with both off
+    the tokens are constant and the ranking is the seed's.
     ``ResourcePlan`` is frozen, so cached plans are shared safely; the list
     itself is fresh per call so callers may sort/slice it.
     """
     dts = tuple(device_types) if device_types else tuple(DEVICE_TYPES)
     return list(_predict_plans_cached(cfg, global_batch, seq, dts,
                                       max_devices, zero, mode, max_t,
-                                      calibration.cache_token()))
+                                      calibration.cache_token(),
+                                      memtrace.cache_token()))
 
 
 def predict_plans_shared(cfg: ModelConfig, global_batch: int, seq: int, *,
@@ -131,20 +140,25 @@ def predict_plans_shared(cfg: ModelConfig, global_batch: int, seq: int, *,
     dts = tuple(device_types) if device_types else tuple(DEVICE_TYPES)
     return _predict_plans_cached(cfg, global_batch, seq, dts,
                                  max_devices, zero, mode, max_t,
-                                 calibration.cache_token())
+                                 calibration.cache_token(),
+                                 memtrace.cache_token())
 
 
 @lru_cache(maxsize=4096)
 def _predict_plans_cached(cfg: ModelConfig, global_batch: int, seq: int,
                           device_types: Tuple[str, ...], max_devices: int,
                           zero: int, mode: str, max_t: int,
-                          cal_token: Tuple = ("off",)
+                          cal_token: Tuple = ("off",),
+                          mem_token: Tuple = ("off",)
                           ) -> Tuple[ResourcePlan, ...]:
     plans: List[ResourcePlan] = []
     d_candidates = [x for x in _pow2_divisors(global_batch) if x <= max_devices]
+    family = cfg.family
     for dt_name in device_types:
         dev = DEVICE_TYPES[dt_name]
-        cap = dev.mem * MEM_SAFETY
+        # adaptive per-class margin; exactly MEM_SAFETY with feedback off
+        margin = memtrace.margin_for(family, zero, dt_name)
+        cap = dev.mem * margin
         for d in d_candidates:
             t = 1
             while t <= max_t and d * t <= max_devices:
@@ -153,11 +167,15 @@ def _predict_plans_cached(cfg: ModelConfig, global_batch: int, seq: int,
                 else:
                     pred = mm.exact_peak_bytes(cfg, global_batch, seq, d, t,
                                                zero=zero)
-                if pred < cap:
+                # residual-corrected prediction gates feasibility and sizes
+                # min_mem; ``pred_bytes`` keeps the raw model output so OOM
+                # post-mortems can compute observed/predicted residuals
+                adj = memtrace.corrected_bytes(family, zero, dt_name, pred)
+                if adj < cap:
                     score = plan_throughput_score(cfg, dev, d, t,
                                                   global_batch, seq)
                     plans.append(ResourcePlan(
-                        n_devices=d * t, min_mem=int(pred / MEM_SAFETY) + 1,
+                        n_devices=d * t, min_mem=int(adj / margin) + 1,
                         d=d, t=t, device_type=dt_name, pred_bytes=pred,
                         score=score, zero=zero))
                     break          # larger t only wastes devices for this d
@@ -192,20 +210,27 @@ def predict_serve_plans(cfg: ModelConfig, batch: int, cache_len: int, *,
                         max_t: int = 64) -> List[ResourcePlan]:
     """Enumerate (d, t) plans for batched decoding: d shards the request
     batch, t the weights.  Ranked by decode throughput per plan (decode is
-    HBM-bound: rate ~ aggregate HBM bandwidth / bytes touched per token)."""
+    HBM-bound: rate ~ aggregate HBM bandwidth / bytes touched per token).
+
+    The memory feedback plane applies here too (serving state is zero=0):
+    feasibility and ``min_mem`` use the residual-corrected prediction and
+    the adaptive margin; with it disabled this is the seed sweep."""
     device_types = list(device_types or DEVICE_TYPES)
     plans: List[ResourcePlan] = []
     d_candidates = [x for x in _pow2_divisors(batch) if x <= max_devices]
+    family = cfg.family
     for dt_name in device_types:
         dev = DEVICE_TYPES[dt_name]
-        cap = dev.mem * MEM_SAFETY
+        margin = memtrace.margin_for(family, 0, dt_name)
+        cap = dev.mem * margin
         for d in d_candidates:
             t = 1
             while t <= max_t and d * t <= max_devices:
                 wbytes, cache, work = mm.serve_bytes_split(cfg, batch,
                                                            cache_len, d, t)
                 pred = wbytes + cache + work
-                if pred < cap:
+                adj = memtrace.corrected_bytes(family, 0, dt_name, pred)
+                if adj < cap:
                     # each decode step streams the weight slice (2W/t) once
                     # per device plus that device's KV/SSM cache slice, and
                     # the d*t devices jointly emit ``batch`` tokens — so
@@ -214,9 +239,9 @@ def predict_serve_plans(cfg: ModelConfig, batch: int, cache_len: int, *,
                     rate = batch * dev.hbm_bw / max(step_bytes, 1.0) \
                         * _tp_efficiency(t, dev)
                     plans.append(ResourcePlan(
-                        n_devices=d * t, min_mem=int(pred / MEM_SAFETY) + 1,
+                        n_devices=d * t, min_mem=int(adj / margin) + 1,
                         d=d, t=t, device_type=dt_name, pred_bytes=pred,
-                        score=rate / ((d * t) ** 0.9)))
+                        score=rate / ((d * t) ** 0.9), zero=0))
                     break
                 t *= 2
     plans.sort(key=lambda p: (-p.score, p.n_devices, p.t))

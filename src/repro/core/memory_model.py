@@ -251,6 +251,17 @@ def exact_peak_bytes(cfg: ModelConfig, global_batch: int, seq: int,
             + XLA_RUNTIME_OVERHEAD)
 
 
+# -------------------------------------------------------- XLA accounting ----
+
+def xla_peak_bytes(ma) -> int:
+    """Peak bytes/device from a ``compiled.memory_analysis()`` object — the
+    ground-truth accounting (arguments + temporaries + outputs, minus
+    donated aliases) shared by ``launch/memcheck``, ``launch/dryrun`` and
+    the live-compile telemetry feeding ``core.memtrace``."""
+    return int(ma.argument_size_in_bytes + ma.temp_size_in_bytes
+               + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+
+
 # ----------------------------------------------------------- serve mode -----
 
 @lru_cache(maxsize=8192)

@@ -33,6 +33,11 @@ class Orchestrator:
 
     def __init__(self, nodes: Sequence[Node]):
         self.engine = LifecycleEngine(nodes, HASAdmission())
+        # after an OOM the job's ranking is stale by construction: the
+        # feedback plane just learned the prediction was wrong, so requeue
+        # against a fresh MARP sweep (identical plans while the plane is
+        # off — predict_plans is memoized on the same token)
+        self.engine.replan_fn = self._replan
         self.pool: ClusterPool = self.engine.pool
         self.nodes: Dict[str, Node] = self.pool.nodes
         self.jobs: Dict[int, Job] = self.engine.jobs
@@ -49,12 +54,31 @@ class Orchestrator:
         return list(self.nodes.values())
 
     # ------------------------------------------------------- lifecycle ---
-    def submit(self, plans: Sequence[ResourcePlan]) -> Job:
-        """Serverless arrival: one admission policy (FIFO + ranked HAS)."""
-        job = Job(job_id=next(self._ids), plans=plans)
+    def submit(self, plans: Sequence[ResourcePlan], *, cfg=None,
+               global_batch: int = 0, seq_len: int = 0,
+               mode: str = "exact") -> Job:
+        """Serverless arrival: one admission policy (FIFO + ranked HAS).
+        ``cfg``/``global_batch``/``seq_len``/``mode`` let the lifecycle
+        replan the job after an OOM with the same memory model it was
+        admitted under (``serverless.submit`` passes them)."""
+        job = Job(job_id=next(self._ids), plans=plans, cfg=cfg,
+                  global_batch=global_batch, seq_len=seq_len,
+                  plan_mode=mode)
         job.arrival = float(next(self._clock))
         self.engine.submit_job(job, now=job.arrival)
         return job
+
+    def _replan(self, job: Job) -> Sequence[ResourcePlan]:
+        """Post-OOM ranking refresh against the live catalog + feedback,
+        under the job's original memory model."""
+        if job.cfg is None or not job.global_batch:
+            return job.plans
+        from repro.core.marp import predict_plans
+        device_types = sorted({n.device_type for n in self.nodes.values()})
+        zero = job.plans[0].zero if job.plans else 1
+        return predict_plans(job.cfg, job.global_batch, job.seq_len,
+                             device_types=device_types, zero=zero,
+                             mode=job.plan_mode)
 
     def try_start(self, rec: Job) -> bool:
         """Single-job admission attempt (bypasses queue order)."""
@@ -64,6 +88,15 @@ class Orchestrator:
         """Job completed: free its devices and restart queued jobs through
         the shared admission policy (FIFO with backfill)."""
         self.engine.complete_job(job_id, now=float(next(self._clock)))
+
+    def oom(self, job_id: int, observed_bytes: float) -> Optional[Job]:
+        """A runner reported the job died out-of-memory at ``observed_bytes``
+        peak.  The shared lifecycle feeds the observation into the memory
+        feedback plane (``core.memtrace``) and requeues the job with its
+        accrued progress; with the plane enabled, the corrected prediction
+        keeps it off the placement that just killed it."""
+        return self.engine.oom_job(job_id, observed_bytes,
+                                   now=float(next(self._clock)))
 
     # --------------------------------------------------- cluster churn ---
     def node_join(self, node: Optional[Node] = None,

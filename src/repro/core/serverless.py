@@ -36,9 +36,15 @@ class SubmitResult:
         else:
             lines.append(f"  queued ({len(self.plans)} feasible plans,"
                          " awaiting resources)")
-        if self.job.preemptions or self.job.migrations:
+        if self.job.preemptions or self.job.migrations or self.job.ooms:
             lines.append(f"  lifecycle: {self.job.preemptions} preemption(s),"
-                         f" {self.job.migrations} migration(s)")
+                         f" {self.job.migrations} migration(s),"
+                         f" {self.job.ooms} oom(s)")
+        if self.job.state == "failed":
+            reason = "no feasible plan with headroom remains" \
+                if not self.job.plans else "retry budget exhausted"
+            lines.append(f"  failed: repeated out-of-memory kills"
+                         f" ({reason})")
         return "\n".join(lines)
 
 
@@ -54,5 +60,15 @@ def submit(orch: Orchestrator, cfg: ModelConfig, train: TrainConfig, *,
             f"MARP found no feasible (d, t) plan for {cfg.name} at"
             f" batch={train.global_batch} seq={train.seq_len} on device types"
             f" {device_types} — the model cannot fit this cluster.")
-    rec = orch.submit(plans)
+    rec = orch.submit(plans, cfg=cfg, global_batch=train.global_batch,
+                      seq_len=train.seq_len, mode=mode)
     return SubmitResult(job=rec, plans=plans)
+
+
+def report_oom(orch: Orchestrator, result: SubmitResult,
+               observed_bytes: float) -> SubmitResult:
+    """A runner watched the submitted job die out-of-memory: feed the
+    observed peak through the lifecycle into the memory feedback plane and
+    requeue the job (with the plane enabled, onto a plan with headroom)."""
+    orch.oom(result.job.job_id, observed_bytes)
+    return result

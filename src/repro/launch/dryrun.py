@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from repro.configs.base import INPUT_SHAPES, TrainConfig
 from repro.configs.registry import (ARCHS, ASSIGNED, get_arch, get_shape,
                                     shape_applicable)
+from repro.core import memory_model as mm
+from repro.core import memtrace
 from repro.launch import hlo_analysis
 from repro.launch.inputs import (batch_struct, decode_inputs,
                                  default_train_config, prefill_inputs,
@@ -139,10 +141,20 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             "temp_bytes": int(ma.temp_size_in_bytes),
             "alias_bytes": int(ma.alias_size_in_bytes),
         }
-        rec["bytes_per_device"] = int(ma.argument_size_in_bytes
-                                      + ma.temp_size_in_bytes
-                                      + ma.output_size_in_bytes
-                                      - ma.alias_size_in_bytes)
+        rec["bytes_per_device"] = mm.xla_peak_bytes(ma)
+        if meta["kind"] == "train":
+            # live-compile telemetry for the memory feedback plane: the
+            # XLA accounting vs MARP's prediction for this (d, t)
+            cfg = get_arch(arch)
+            shape = get_shape(shape_name)
+            t_deg = mesh.shape.get("model", 1)
+            d_deg = max(mesh.devices.size // t_deg, 1)
+            pred = mm.exact_peak_bytes(cfg, shape.global_batch,
+                                       shape.seq_len, d_deg, t_deg,
+                                       zero=meta["zero"])
+            memtrace.record(cfg.family, meta["zero"], memtrace.ANY_DEVICE,
+                            pred, rec["bytes_per_device"], source="xla")
+            rec["pred_exact"] = pred
         ca = compiled.cost_analysis()
         if isinstance(ca, (list, tuple)):
             ca = ca[0]

@@ -17,6 +17,7 @@ import jax
 from repro.configs.base import TrainConfig
 from repro.configs.registry import get_arch
 from repro.core import memory_model as mm
+from repro.core import memtrace
 from repro.launch.inputs import train_inputs
 from repro.launch.mesh import make_plan_mesh
 from repro.train import build_train_step
@@ -51,12 +52,14 @@ def run_one(arch, batch, seq, d, t, zero=0):
     compiled = jax.jit(step, in_shardings=(s_sh, b_sh),
                        donate_argnums=(0,)).lower(state_sds,
                                                   batch_sds).compile()
-    ma = compiled.memory_analysis()
-    actual = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
-              + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    actual = mm.xla_peak_bytes(compiled.memory_analysis())
     pred_exact = mm.exact_peak_bytes(cfg, batch, seq, d, t, zero=zero,
                                      microbatch=1)
     pred_paper = mm.paper_peak_bytes(cfg, batch, seq, d, t)
+    # offline measured source for the memory feedback plane (the committed
+    # JSONs seed it at import; in-process runs feed it directly)
+    memtrace.record(cfg.family, zero, memtrace.ANY_DEVICE, pred_exact,
+                    actual, source="memcheck")
     return {"arch": arch, "batch": batch, "seq": seq, "d": d, "t": t,
             "zero": zero, "actual_bytes": int(actual),
             "pred_exact": pred_exact, "pred_paper": pred_paper,

@@ -15,12 +15,38 @@ import numpy as np
 
 from repro.configs.base import TrainConfig
 from repro.configs.registry import get_arch, smoke_config
+from repro.core import memory_model as mm
+from repro.core import memtrace
 from repro.data import SyntheticTokens
 from repro.launch.mesh import make_plan_mesh
 from repro.parallel import sharding as sh
 from repro.train import build_train_step, make_train_state, state_specs
 from repro import ckpt as ckpt_mod
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def record_compile_telemetry(step_jit, state, batch, cfg, tc, d: int,
+                             t: int) -> object:
+    """AOT-compile the jitted step and feed its XLA memory accounting into
+    the memory feedback plane (``core.memtrace``) — the live-compile
+    telemetry source.  Returns the compiled executable so the caller can
+    drive the loop with it (one compile, not two); falls back to the
+    jitted function on any failure (telemetry must never kill training)."""
+    try:
+        compiled = step_jit.lower(state, batch).compile()
+        observed = mm.xla_peak_bytes(compiled.memory_analysis())
+        pred = mm.exact_peak_bytes(cfg, tc.global_batch, tc.seq_len, d, t,
+                                   zero=tc.zero, microbatch=tc.microbatch)
+        dev_type = memtrace.device_type_for(jax.devices()[0].device_kind)
+        memtrace.record(cfg.family, tc.zero, dev_type, pred, observed,
+                        source="xla")
+        print(f"memtrace: observed peak {observed / 2**30:.2f} GiB vs"
+              f" predicted {pred / 2**30:.2f} GiB"
+              f" ({dev_type}, zero={tc.zero})", flush=True)
+        return compiled
+    except Exception as e:  # noqa: BLE001 — telemetry is best-effort
+        print(f"memtrace: compile telemetry unavailable ({e})", flush=True)
+        return step_jit
 
 
 def main(argv=None):
@@ -62,12 +88,22 @@ def main(argv=None):
 
     data = SyntheticTokens(cfg, args.batch, args.seq, seed=tc.seed)
     it = iter(data)
+
+    def prep(raw):
+        return {k: jnp.asarray(v) for k, v in raw.items()
+                if k in ("tokens", "labels", "modal_embeds")}
+
+    # one AOT compile: drives the loop below *and* feeds observed peak
+    # memory into the feedback plane (batch shapes are static, so the
+    # compiled executable serves every step)
+    first = prep(next(it))
+    step_fn = record_compile_telemetry(step_jit, state, first, cfg, tc,
+                                       d, max(t, 1))
     losses = []
     t0 = time.time()
     for i in range(args.steps):
-        batch = {k: jnp.asarray(v) for k, v in next(it).items()
-                 if k in ("tokens", "labels", "modal_embeds")}
-        state, metrics = step_jit(state, batch)
+        batch = first if i == 0 else prep(next(it))
+        state, metrics = step_fn(state, batch)
         losses.append(float(metrics["loss"]))
         if i % args.log_every == 0 or i == args.steps - 1:
             dt = time.time() - t0

@@ -513,6 +513,59 @@ def test_predict_plans_calibration_round_trip_stays_golden():
     assert predict_plans_shared(cfg, 32, 1024, **kw) is shared
 
 
+def test_predict_plans_memtrace_round_trip_stays_golden():
+    """Feedback-plane enable/record/disable cycles must leave the
+    memtrace-off ranking (and the shared memoized tuple identity)
+    bit-identical to the seed."""
+    from repro.core import memtrace
+    from repro.core.marp import predict_plans_shared, predict_serve_plans
+    memtrace.disable()
+    cfg = ARCHS["gpt2-350m"]
+    kw = dict(device_types=["A100-40G", "A100-80G", "RTX3090"])
+    base = predict_plans(cfg, 32, 1024, **kw)
+    shared = predict_plans_shared(cfg, 32, 1024, **kw)
+    serve_base = predict_serve_plans(cfg, 16, 4096, device_types=["v5e"])
+    memtrace.enable()
+    try:
+        # an observation that pushes the top plan past the 40G device
+        top = base[0]
+        memtrace.record(cfg.family, top.zero, top.device_type,
+                        top.pred_bytes, 41 * GB, source="oom")
+        assert predict_plans(cfg, 32, 1024, **kw) != base
+    finally:
+        memtrace.disable()
+    assert predict_plans(cfg, 32, 1024, **kw) == base
+    assert predict_plans_shared(cfg, 32, 1024, **kw) is shared
+    assert predict_serve_plans(cfg, 16, 4096, device_types=["v5e"]) \
+        == serve_base
+    memtrace.reset()
+    memtrace.seed_from_experiments()
+
+
+def test_simulation_memtrace_off_identical_after_round_trip():
+    """Simulator decisions with the plane off are bit-identical to the
+    seed even after an enable/record/disable cycle mid-process (the token
+    keeps stale corrected rankings out of the shared plan cache)."""
+    from repro.core import memtrace
+    nodes = make_cluster(PAPER_SIM_CLUSTER)
+    types = sorted({n.device_type for n in nodes})
+    jobs = new_workload(30, types, seed=13)
+    want = _seed_simulate(copy.deepcopy(jobs), copy.deepcopy(nodes))
+    memtrace.enable()
+    memtrace.record("dense", 1, types[0], 5 * GB, 12 * GB, source="oom")
+    memtrace.disable()
+    jobs2 = new_workload(30, types, seed=13)
+    got = simulate(jobs2, copy.deepcopy(nodes),
+                   FrenzyScheduler(), charge_overhead=False).jobs
+    for w, g in zip(sorted(want, key=lambda j: j.job_id),
+                    sorted(got, key=lambda j: j.job_id)):
+        assert g.placements == w.placements, w.job_id
+        assert g.start_time == w.start_time, w.job_id
+        assert g.finish_time == w.finish_time, w.job_id
+    memtrace.reset()
+    memtrace.seed_from_experiments()
+
+
 def test_predict_plans_cache_key_invalidation():
     """Every key component must reach the cache key: changing it changes
     the result (or at least misses the cache)."""
