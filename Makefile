@@ -9,11 +9,14 @@
 #   make memcheck     regenerate experiments/memcheck JSONs (XLA compiles;
 #                     both ZeRO stages — they seed the memory feedback
 #                     plane at import, so commit the refreshed files)
+#   make serve-smoke  serving plane end-to-end smoke: the SLO-autoscaling
+#                     benchmark's quick cell plus a tiny continuous-
+#                     batching decode on the local backend
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 tier1-fast bench-smoke bench bench-json memcheck
+.PHONY: tier1 tier1-fast bench-smoke bench bench-json memcheck serve-smoke
 
 tier1:
 	$(PY) -m pytest -x -q
@@ -33,3 +36,10 @@ bench-json:
 memcheck:
 	$(PY) -m repro.launch.memcheck --zero 0 --force
 	$(PY) -m repro.launch.memcheck --zero 1 --force
+
+serve-smoke:
+	$(PY) -m benchmarks.serve_autoscale --quick
+	$(PY) -m repro.launch.serve --arch llama3.2-3b --smoke --batch 2 \
+		--prompt-len 16 --gen 8
+	$(PY) -m repro.launch.serve --arch llama3.2-3b --smoke --batch 2 \
+		--prompt-len 16 --gen 8 --continuous 5

@@ -26,7 +26,7 @@ def main() -> None:
     from benchmarks import (elastic_churn, jct_newworkload, jct_traces,
                             kernels, memory_accuracy, oom_resilience,
                             roofline, sched_overhead, sched_scale,
-                            train_step)
+                            serve_autoscale, train_step)
     suites = [
         ("sched_overhead", sched_overhead.run),        # Fig 5a
         # --skip-slow trims the scale grid to its small corner (the full
@@ -36,6 +36,9 @@ def main() -> None:
         ("elastic_churn", lambda: elastic_churn.run(quick=args.skip_slow)),
         # memory feedback plane vs static margin under misprediction
         ("oom_resilience", lambda: oom_resilience.run(quick=args.skip_slow)),
+        # SLO-aware serve autoscaling vs static replicas (serving plane)
+        ("serve_autoscale",
+         lambda: serve_autoscale.run(quick=args.skip_slow)),
         ("jct_new", jct_newworkload.run),              # Fig 4
         ("jct_traces", jct_traces.run),                # Fig 5b
         ("roofline", roofline.run),                    # deliverable g

@@ -1,0 +1,90 @@
+"""Serving plane: SLO-aware autoscaling vs a static-replica baseline.
+
+Serve jobs (continuous-batching replica groups, ``traces.serve_workload``)
+ride a request-rate trace — diurnal or bursty — on the heterogeneous pool,
+co-scheduled with a train backlog.  Two arms, identical traces:
+
+* **autoscale** — the lifecycle engine's SLO autoscaler tracks
+  ``replicas_for_slo`` as the rate moves (typed ``request_rate_change`` /
+  ``scale_up`` / ``scale_down`` events);
+* **static** — each job pins the replica count a user would provision for
+  the trace peak (``autoscale=False``; SLO-safe by construction, pays for
+  the peak all day).
+
+Reported per cell: SLO attainment of both arms, serve GPU-seconds of both
+arms, and the saving fraction — the headline is >= 15% GPU-seconds saved
+at equal-or-better attainment on the bursty trace (it lands far above).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.sched_scale import make_scaled_cluster
+from repro.cluster.schedulers import FrenzyScheduler
+from repro.cluster.simulator import simulate
+from repro.cluster.traces import new_workload, serve_workload
+
+FULL_GRID = (100, 1000)
+QUICK_GRID = (100,)
+HORIZON = 4 * 3600.0
+
+
+def _arm(n_nodes: int, trace: str, *, static: bool, n_serve: int,
+         n_train: int, seed: int = 7):
+    nodes = make_scaled_cluster(n_nodes)
+    types = sorted({n.device_type for n in nodes})
+    sjobs, revs = serve_workload(n_serve, types, horizon=HORIZON,
+                                 seed=seed, trace=trace, static=static)
+    tjobs = new_workload(n_train, types, seed=seed,
+                         mean_interarrival=HORIZON / max(4 * n_train, 1))
+    for j in tjobs:
+        j.job_id += 100_000                 # keep id spaces disjoint
+    res = simulate(sjobs + tjobs, nodes, FrenzyScheduler(),
+                   charge_overhead=False, rate_events=revs)
+    return res
+
+
+def run(quick: bool = False):
+    rows = []
+    for n_nodes in (QUICK_GRID if quick else FULL_GRID):
+        n_serve = max(6, n_nodes // 12)
+        n_train = max(6, n_nodes // 16)
+        for trace in ("diurnal", "bursty"):
+            t0 = time.perf_counter()
+            auto = _arm(n_nodes, trace, static=False, n_serve=n_serve,
+                        n_train=n_train)
+            stat = _arm(n_nodes, trace, static=True, n_serve=n_serve,
+                        n_train=n_train)
+            wall = time.perf_counter() - t0
+            saving = 1.0 - auto.serve_gpu_seconds \
+                / max(stat.serve_gpu_seconds, 1e-9)
+            tag = f"serve_autoscale/{trace}/n{n_nodes}"
+            rows.append((f"{tag}/slo_auto", wall * 1e6 / 2,
+                         round(auto.slo_attainment, 4)))
+            rows.append((f"{tag}/slo_static", wall * 1e6 / 2,
+                         round(stat.slo_attainment, 4)))
+            rows.append((f"{tag}/gpu_s_auto", auto.serve_gpu_seconds,
+                         round(auto.serve_gpu_seconds, 1)))
+            rows.append((f"{tag}/gpu_s_static", stat.serve_gpu_seconds,
+                         round(stat.serve_gpu_seconds, 1)))
+            rows.append((f"{tag}/gpu_s_saving", saving * 100.0,
+                         round(saving, 4)))
+            rows.append((f"{tag}/scale_events", auto.scale_ups
+                         + auto.scale_downs,
+                         f"{auto.scale_ups}+{auto.scale_downs}"))
+    return rows
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="100-node cell only (the bench-smoke /"
+                         " serve-smoke grid)")
+    args = ap.parse_args()
+    for name, us, derived in run(quick=args.quick):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

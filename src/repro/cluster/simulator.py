@@ -34,8 +34,8 @@ from repro.core import calibration
 from repro.core.devices import DEVICE_TYPES
 from repro.core.has import Node
 from repro.core.lifecycle import (  # noqa: F401  (re-exported compat names)
-    ClusterEvent, Job, LifecycleEngine, OomCheckFn, ReplanFn, Scheduler,
-    DEFAULT_MIGRATION_BANDWIDTH,
+    ClusterEvent, Job, LifecycleEngine, OomCheckFn, RateEvent, ReplanFn,
+    Scheduler, DEFAULT_MIGRATION_BANDWIDTH, DEFAULT_SCALE_UP_DELAY,
 )
 from repro.core.marp import ResourcePlan, _tp_efficiency, _dp_efficiency, \
     _active_analytic
@@ -58,10 +58,31 @@ class SimResult:
     #: per-OOM telemetry from the engine: (time, job_id, device_type,
     #: predicted bytes, observed bytes) — lets benchmarks count repeats
     oom_log: Sequence[Tuple[float, int, str, float, float]] = ()
+    scale_ups: int = 0                      # serve replicas provisioned
+    scale_downs: int = 0                    # serve replicas released
 
     @property
     def finished(self) -> List[Job]:
         return [j for j in self.jobs if j.finish_time >= 0]
+
+    @property
+    def serve_jobs(self) -> List[Job]:
+        return [j for j in self.jobs if j.kind == "serve"]
+
+    @property
+    def slo_attainment(self) -> float:
+        """Aggregate fraction of accounted serve time the p95 target was
+        met (NaN with no serve jobs)."""
+        total = sum(j.slo_total_s for j in self.serve_jobs)
+        if total <= 0.0:
+            return float("nan")
+        return sum(j.slo_good_s for j in self.serve_jobs) / total
+
+    @property
+    def serve_gpu_seconds(self) -> float:
+        """Device-seconds the serve replica groups consumed — the quantity
+        SLO-aware autoscaling saves against a static-replica baseline."""
+        return sum(j.gpu_seconds for j in self.serve_jobs)
 
     @property
     def avg_jct(self) -> float:
@@ -88,7 +109,13 @@ class SimResult:
 
 def job_rate(job: Job, placements: Sequence[Tuple[str, int]],
              nodes: Dict[str, Node], d: int, t: int) -> float:
-    """Samples/s of a placed job (synchronous DP: slowest device gates)."""
+    """Samples/s of a placed job (synchronous DP: slowest device gates).
+
+    Serve jobs progress in wall-clock seconds (``total_samples`` is the
+    serving horizon): rate 1.0, with throughput/SLO handled by the
+    engine's replica accounting, not the finish clock."""
+    if job.kind == "serve":
+        return 1.0
     n_devices = 0
     slowest = None
     first_type = nodes[placements[0][0]].device_type
@@ -114,22 +141,28 @@ def job_rate(job: Job, placements: Sequence[Tuple[str, int]],
 def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
              scheduler: Scheduler, charge_overhead: bool = True, *,
              cluster_events: Sequence[ClusterEvent] = (),
+             rate_events: Sequence[RateEvent] = (),
              elastic: bool = False,
              migration_bandwidth: float = DEFAULT_MIGRATION_BANDWIDTH,
              oom_check_fn: OomCheckFn = None,
              replan_fn: ReplanFn = None,
-             max_oom_retries: int = 8
+             max_oom_retries: int = 8,
+             scale_up_delay: float = DEFAULT_SCALE_UP_DELAY
              ) -> SimResult:
     """Drive the shared lifecycle engine over a trace.
 
     charge_overhead: add measured scheduler wall time to the virtual
     clock (the paper's Fig 5a overhead feeds its JCT comparison).
     cluster_events: node_join/node_leave/reschedule dynamics (churn/spot).
+    rate_events: request_rate_change traces for serve jobs
+    (``traces.serve_workload``) — the SLO autoscaler reacts to them.
     elastic: allow running jobs to migrate to better-ranked plans.
     oom_check_fn: misprediction model (``traces.misprediction_oracle``) —
     placements whose true peak exceeds device memory die in an ``oom``
     event, feed the memory feedback plane, and requeue.
     replan_fn: post-OOM plan re-ranking (against the updated corrector).
+    scale_up_delay: seconds from a serve scale-up decision to the replicas
+    serving (0 = warm-pool provisioning).
     """
     engine = LifecycleEngine(nodes, scheduler,
                              charge_overhead=charge_overhead,
@@ -138,11 +171,12 @@ def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
                              oom_check_fn=oom_check_fn,
                              replan_fn=replan_fn,
                              max_oom_retries=max_oom_retries,
+                             scale_up_delay=scale_up_delay,
                              reset=True)
     pool_nodes = engine.pool.nodes
     engine.rate_fn = lambda job, placements, d, t: \
         job_rate(job, placements, pool_nodes, d, t)
-    engine.run(jobs, cluster_events)
+    engine.run(jobs, cluster_events, rate_events)
     unfinished = [j for j in jobs if j.finish_time < 0]
     if not cluster_events and engine.oom_count == 0:
         # static cluster, no OOMs: capacity never shrinks and nothing
@@ -156,4 +190,6 @@ def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
                      unfinished=len(unfinished),
                      ooms=engine.oom_count,
                      oom_failures=engine.oom_failures,
-                     oom_log=tuple(engine.oom_log))
+                     oom_log=tuple(engine.oom_log),
+                     scale_ups=engine.scale_up_count,
+                     scale_downs=engine.scale_down_count)

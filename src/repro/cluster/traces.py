@@ -23,8 +23,11 @@ from dataclasses import replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.core.lifecycle import ClusterEvent, NODE_JOIN, NODE_LEAVE
-from repro.core.marp import predict_plans_shared
+from repro.core.lifecycle import (ClusterEvent, RateEvent, NODE_JOIN,
+                                  NODE_LEAVE)
+from repro.core.marp import (default_serve_slo, predict_plans_shared,
+                             predict_serve_plans_shared, replicas_for_slo,
+                             serve_plan_capacity)
 from repro.cluster.simulator import SimJob
 
 
@@ -186,6 +189,116 @@ def spot_schedule(nodes: Sequence, *, horizon: float, n_waves: int = 3,
                                        node_id=node.node_id))
     events.sort(key=lambda e: (e.time, e.kind, e.node_id))
     return events
+
+
+def diurnal_rate_trace(*, horizon: float, base_rate: float,
+                       peak_rate: float, period: Optional[float] = None,
+                       n_points: int = 48, phase: float = 0.0
+                       ) -> List[Tuple[float, float]]:
+    """Smooth day/night request-rate curve (HAS-GPU-style diurnal load):
+    a raised sinusoid between ``base_rate`` and ``peak_rate`` sampled at
+    ``n_points`` piecewise-constant steps over ``horizon``.  ``period``
+    defaults to the horizon (one day-cycle per run)."""
+    period = period if period is not None else horizon
+    mid = (base_rate + peak_rate) / 2.0
+    amp = (peak_rate - base_rate) / 2.0
+    out = []
+    for i in range(n_points):
+        t = horizon * i / n_points
+        r = mid - amp * math.cos(2.0 * math.pi * (t / period) + phase)
+        out.append((t, max(r, 0.0)))
+    return out
+
+
+def bursty_rate_trace(*, horizon: float, base_rate: float,
+                      burst_rate: float, n_bursts: int = 4,
+                      burst_len: Optional[float] = None, seed: int = 0
+                      ) -> List[Tuple[float, float]]:
+    """Flash-crowd request rate: ``base_rate`` background with
+    ``n_bursts`` non-overlapping windows at ``burst_rate`` (each
+    ``burst_len`` seconds, default 4% of the horizon) at deterministic
+    uniform times — the trace a static-replica deployment must provision
+    peak capacity for."""
+    rng = random.Random(600 + seed)
+    blen = burst_len if burst_len is not None else horizon * 0.04
+    out = [(0.0, base_rate)]
+    starts: List[float] = []
+    for _ in range(n_bursts * 20):          # rejection-sample spacing
+        if len(starts) >= n_bursts:
+            break
+        t = rng.uniform(horizon * 0.05, horizon * 0.9 - blen)
+        if all(abs(t - s) > 2.0 * blen for s in starts):
+            starts.append(t)
+    for t in sorted(starts):
+        out.append((t, burst_rate))
+        out.append((t + blen, base_rate))
+    return out
+
+
+#: serve model pool: the small end of NewWorkload (interactive-sized).
+SERVE_SIZES = ("gpt2-124m", "gpt2-350m", "gpt2-774m")
+
+
+def serve_workload(n_jobs: int, device_types: Sequence[str], *,
+                   horizon: float = 4 * 3600.0, seed: int = 0,
+                   trace: str = "bursty", peak_mult: float = 6.0,
+                   static: bool = False
+                   ) -> Tuple[List[SimJob], List[RateEvent]]:
+    """Serve jobs + their request-rate traces for the co-scheduling sim.
+
+    Each job is a continuous-batching replica group of a small model:
+    ranked serve plans from ``predict_serve_plans_shared`` (zero=0), an
+    SLO from ``default_serve_slo``, and a diurnal or bursty rate trace
+    scaled to its single-replica capacity (base load ~1-2 replicas, peak
+    ``peak_mult``x the base).  With ``static=True`` the jobs pin the
+    replica count a static deployment would provision for the trace peak
+    (``autoscale=False``) — the baseline arm of
+    ``benchmarks/serve_autoscale.py``.  Traces are deterministic per
+    seed and identical across the two arms."""
+    rng = random.Random(700 + seed)
+    jobs: List[SimJob] = []
+    rate_events: List[RateEvent] = []
+    jid = 0
+    t = 0.0
+    while len(jobs) < n_jobs:
+        t += rng.expovariate(1.0 / max(horizon * 0.002, 1.0))
+        cfg = GPT2_SIZES[rng.choice(SERVE_SIZES)]
+        batch = rng.choice([8, 16, 32])
+        cache_len = rng.choice([1024, 2048])
+        plans = predict_serve_plans_shared(cfg, batch, cache_len,
+                                           device_types=tuple(device_types),
+                                           max_devices=64)
+        if not plans:
+            continue
+        top = plans[0]
+        replica_rate, step_s = serve_plan_capacity(cfg, top, batch,
+                                                   cache_len)
+        slo = default_serve_slo(cfg, top, batch, cache_len)
+        base = replica_rate * rng.uniform(0.4, 0.9)
+        peak = base * peak_mult
+        if trace == "diurnal":
+            curve = diurnal_rate_trace(horizon=horizon - t, base_rate=base,
+                                       peak_rate=peak,
+                                       phase=rng.uniform(0, 2 * math.pi))
+        else:
+            curve = bursty_rate_trace(horizon=horizon - t, base_rate=base,
+                                      burst_rate=peak, seed=seed * 1000 + jid)
+        job = SimJob(job_id=jid, arrival=t, cfg=cfg, global_batch=batch,
+                     seq_len=cache_len,
+                     total_samples=max(int(horizon - t), 1),
+                     plans=plans, kind="serve", request_rate=curve[0][1],
+                     slo_p95_s=slo)
+        if static:
+            job.autoscale = False
+            job.static_replicas = replicas_for_slo(
+                replica_rate, step_s, peak, slo,
+                max_replicas=job.max_replicas)
+        jobs.append(job)
+        for off, rate in curve[1:]:
+            rate_events.append(RateEvent(time=t + off, job_id=jid,
+                                         rate=rate))
+        jid += 1
+    return jobs, rate_events
 
 
 def misprediction_oracle(*, severity: float = 0.5, frac: float = 0.2,

@@ -43,15 +43,31 @@ MIN_MFU, MAX_MFU = 0.02, 0.95
 #: wildcard consulted when the exact family is missing.
 MFUTable = Dict[Tuple[str, str], float]
 
+#: Fraction of peak HBM bandwidth a decode step attains when the decode
+#: table has no better number (streaming weights + ring-cache reads never
+#: reach the STREAM peak; ~70% is typical of tuned decode loops).
+DECODE_ATTAINABLE = 0.70
+
 _enabled: bool = False
 _table: MFUTable = {}
 _default: float = DEFAULT_MFU
 _version: int = 0
 
+# decode-bandwidth table — (device_type, family) -> fraction of peak HBM
+# bandwidth the single-token decode loop attains (the serving analog of the
+# MFU table; consumed by marp's serve rate model and the SLO autoscaler)
+_decode_enabled: bool = False
+_decode_table: MFUTable = {}
+_decode_default: float = DECODE_ATTAINABLE
+
 
 def cache_token() -> Tuple:
-    """Hashable component of MARP's memoization key (PR 1 invariants)."""
-    return ("on", _version) if _enabled else ("off",)
+    """Hashable component of MARP's memoization key (PR 1 invariants).
+    Covers both the MFU table and the decode-bandwidth table: ``("off",)``
+    whenever neither is enabled — the fully-off ranking (train *and* serve
+    sweeps) is bit-identical to the seed — and ``("on", version)``
+    otherwise, the shared ``version`` bumping on every enable."""
+    return ("on", _version) if (_enabled or _decode_enabled) else ("off",)
 
 
 def is_enabled() -> bool:
@@ -78,8 +94,11 @@ def enable(table: Mapping[Tuple[str, str], float], *,
 
 
 def disable() -> None:
-    global _enabled
+    global _enabled, _version
     _enabled = False
+    # the decode table may still be on: bump the shared version so plans
+    # memoized while the MFU table was enabled are never served stale
+    _version += 1
 
 
 @contextmanager
@@ -95,6 +114,56 @@ def calibrated(table: Mapping[Tuple[str, str], float], *,
             enable(prev[1], default=prev[2])
         else:
             disable()
+
+
+def decode_bw_for(family: str, device_type: str) -> float:
+    """Effective decode HBM bandwidth (bytes/s) for one device of
+    ``device_type`` serving ``family`` models — peak bandwidth scaled by
+    the calibrated decode efficiency.  With the decode table off this is
+    the raw ``DeviceType.hbm_bw`` (the seed's serve-plan rate model,
+    bit-identical)."""
+    bw = DEVICE_TYPES[device_type].hbm_bw
+    if not _decode_enabled:
+        return bw
+    for key in ((device_type, family), (device_type, "*")):
+        if key in _decode_table:
+            return bw * _decode_table[key]
+    return bw * _decode_default
+
+
+def is_decode_enabled() -> bool:
+    return _decode_enabled
+
+
+def enable_decode(table: Mapping[Tuple[str, str], float], *,
+                  default: float = DECODE_ATTAINABLE) -> None:
+    """Install a measured decode-bandwidth-efficiency table (fractions of
+    peak HBM bandwidth per (device_type, family); ``launch/serve`` measures
+    them with ``measured_decode_eff``)."""
+    global _decode_enabled, _decode_table, _decode_default, _version
+    _decode_table = {tuple(k): float(v) for k, v in table.items()}
+    _decode_default = float(default)
+    _decode_enabled = True
+    _version += 1
+
+
+def disable_decode() -> None:
+    global _decode_enabled, _version
+    _decode_enabled = False
+    # the MFU table may still be on: bump the shared version so plans
+    # memoized while the decode table was enabled are never served stale
+    _version += 1
+
+
+def measured_decode_eff(tok_per_s: float, cfg: ModelConfig, batch: int,
+                        cache_len: int, d: int, t: int,
+                        dev: DeviceType) -> float:
+    """Achieved fraction of peak HBM bandwidth from a measured decode
+    throughput: each step streams the weight slice plus the cache slice
+    once per device to emit ``batch`` tokens."""
+    wbytes, cache, _ = mm.serve_bytes_split(cfg, batch, cache_len, d, t)
+    achieved_bw = tok_per_s * (wbytes + cache) / max(batch, 1)
+    return min(max(achieved_bw / dev.hbm_bw, 0.01), 1.0)
 
 
 def _clamp(x: float) -> float:

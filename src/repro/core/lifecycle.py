@@ -19,6 +19,15 @@ Typed event set
                 (progress accrued) and requeued with their remaining work;
                 the node leaves the indexed pool.
 ``reschedule``  explicit trigger: re-run admission + the elastic scan.
+``request_rate_change``  (serve jobs) the offered request rate moved; the
+                SLO autoscaler recomputes the replica target from the p95
+                token-latency model (``marp.replicas_for_slo``) and emits
+                ``scale_up`` / ``scale_down`` events.
+``scale_up``    (serve jobs) admit additional replicas of the running plan
+                from the shared pool (after ``scale_up_delay`` — 0 by
+                default: serverless warm-pool provisioning).
+``scale_down``  (serve jobs) release surplus replicas back to the pool
+                (freed capacity immediately re-admits queued work).
 ``oom``         a running job exceeded device memory: the job is killed,
                 the observed peak is fed back into the memory feedback
                 plane (``core.memtrace`` — so the corrected prediction can
@@ -40,22 +49,40 @@ save+restore of the training state (``ckpt.checkpoint.migration_seconds``)
 pay the same restore cost; schedulers see them first, ordered by remaining
 work (``fifo_order``).
 
+Serving contract
+----------------
+A ``kind="serve"`` job is a long-lived replica group: admission starts one
+replica under the best satisfiable serve plan (``marp.predict_serve_plans``
+ranking, ``zero=0``), and the SLO autoscaler keeps
+``replicas_for_slo(replica_rate, step_s, request_rate, slo_p95_s)``
+replicas of that plan alive as the offered rate moves — replicas are plain
+pool placements, so serve groups co-schedule, preempt, and OOM-requeue
+through exactly the machinery train jobs use.  SLO attainment is accrued
+segment-by-segment (every rate/scale/lifecycle transition closes a
+segment): a segment is *good* when the p95 token latency of the current
+replica group meets the job's target; ``gpu_seconds`` accrues
+``replicas x plan.n_devices`` over the same segments.  Jobs with
+``autoscale=False`` pin ``static_replicas`` (the benchmark baseline).
+
 Static-cluster guarantee: with ``elastic=False`` and no node events, the
 engine's decisions are bit-identical to the seed event loop and the seed
 orchestrator (``tests/test_golden_equivalence.py``) — stale-event epochs,
-progress accrual, and priority ordering are all dormant on that path.
+progress accrual, and priority ordering are all dormant on that path, and
+every serve mechanism is keyed off ``kind="serve"`` jobs, so serve-free
+runs never touch it.
 """
 from __future__ import annotations
 
 import heapq
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import (Callable, Dict, Iterable, List, Optional, Sequence, Set,
                     Tuple, Union)
 
 from repro.core import memtrace
 from repro.core.has import Allocation, ClusterPool, Node
-from repro.core.marp import ResourcePlan
+from repro.core.marp import (ResourcePlan, p95_token_latency,
+                             replicas_for_slo, serve_plan_capacity)
 
 # Event kinds (the typed event set).
 ARRIVE = "arrive"
@@ -64,9 +91,17 @@ NODE_JOIN = "node_join"
 NODE_LEAVE = "node_leave"
 RESCHEDULE = "reschedule"
 OOM = "oom"
+RATE_CHANGE = "request_rate_change"
+SCALE_UP = "scale_up"
+SCALE_DOWN = "scale_down"
 
 #: bytes/s assumed for checkpoint save+restore during migration/preemption
 DEFAULT_MIGRATION_BANDWIDTH = 16 * 2 ** 30
+
+#: seconds from a scale-up decision to the replicas serving.  0 models the
+#: serverless warm pool (weights resident, replicas spin up within a
+#: virtual-clock tick); benchmarks raise it to study cold provisioning.
+DEFAULT_SCALE_UP_DELAY = 0.0
 
 
 @dataclass(eq=False)
@@ -102,6 +137,32 @@ class Job:
     preemptions: int = 0
     migrations: int = 0
     ooms: int = 0                           # OOM kills of this job
+    # serving state (kind == "serve"; dormant defaults otherwise)
+    kind: str = "train"                     # train | serve
+    request_rate: float = 0.0               # offered decode tokens/s
+    slo_p95_s: float = 0.0                  # p95 token-latency target
+    autoscale: bool = True                  # False: pin static_replicas
+    static_replicas: int = 0                # baseline fixed replica count
+    max_replicas: int = 64
+    serve_replicas: int = 0                 # live replica count
+    replica_placements: List[Tuple[Tuple[str, int], ...]] = \
+        field(default_factory=list)
+    replica_rate: float = 0.0               # tokens/s one replica attains
+    replica_step_s: float = 0.0             # seconds per decode step
+    scale_ups: int = 0
+    scale_downs: int = 0
+    slo_good_s: float = 0.0                 # seconds the p95 target was met
+    slo_total_s: float = 0.0                # seconds since arrival accounted
+    gpu_seconds: float = 0.0                # device-seconds consumed serving
+    serve_accounted: float = -1.0           # last SLO-accounting timestamp
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of accounted time the p95 target was met (NaN before
+        any accounting — train jobs, or a serve job never observed)."""
+        if self.slo_total_s <= 0.0:
+            return float("nan")
+        return self.slo_good_s / self.slo_total_s
 
     @property
     def queue_time(self) -> float:
@@ -145,6 +206,16 @@ class ClusterEvent:
     kind: str                               # node_join | node_leave | reschedule
     node_id: str = ""
     node: Optional[Node] = None
+
+
+@dataclass(frozen=True)
+class RateEvent:
+    """Externally supplied ``request_rate_change`` for one serve job — the
+    request-rate traces (``cluster.traces.diurnal_rate_trace`` /
+    ``bursty_rate_trace``) compile to these."""
+    time: float
+    job_id: int
+    rate: float                             # offered decode tokens/s
 
 
 # --------------------------------------------------------------------------
@@ -311,6 +382,7 @@ class LifecycleEngine:
                  replan_fn: Optional[ReplanFn] = None,
                  oom_detect_seconds: float = DEFAULT_OOM_DETECT_SECONDS,
                  max_oom_retries: int = 8,
+                 scale_up_delay: float = DEFAULT_SCALE_UP_DELAY,
                  reset: bool = False):
         self.pool = ClusterPool(nodes, reset=reset)
         self.scheduler = scheduler if scheduler is not None else HASAdmission()
@@ -323,6 +395,7 @@ class LifecycleEngine:
         self.replan_fn = replan_fn
         self.oom_detect_seconds = oom_detect_seconds
         self.max_oom_retries = max_oom_retries
+        self.scale_up_delay = scale_up_delay
         self.jobs: Dict[int, Job] = {}
         self.queued: List[Job] = []
         self._min_need = float("inf")       # min over queued of min_devices
@@ -339,6 +412,11 @@ class LifecycleEngine:
         self.sched_calls = 0
         self.preemption_count = 0
         self.migration_count = 0
+        self.scale_up_count = 0             # serve replicas added
+        self.scale_down_count = 0           # serve replicas released
+        # serve jobs running below their SLO replica target (capacity was
+        # tight at scale time); retried whenever capacity frees
+        self._serve_backlog: Set[int] = set()
         self.oom_count = 0
         self.oom_failures = 0               # jobs abandoned after retries
         #: per-OOM telemetry: (time, job_id, device_type, pred, observed)
@@ -352,6 +430,8 @@ class LifecycleEngine:
         job can newly fit — a full-queue pass would make identical decisions
         (golden-tested) at O(queue) cost per submit."""
         self.jobs.setdefault(job.job_id, job)
+        if job.kind == "serve" and job.serve_accounted < 0:
+            job.serve_accounted = now       # queue wait counts against SLO
         if not self.try_admit(job, now):
             self.queued.append(job)
             self._min_need = min(self._min_need, job.min_devices)
@@ -383,6 +463,7 @@ class LifecycleEngine:
         if self.queued and self.pool.total_idle >= self._min_need:
             self._run_scheduler(now)
         self._maybe_migrate(now)
+        self._retry_serve_scale(now)
 
     def node_join(self, node: Optional[Node] = None, node_id: str = "",
                   now: float = 0.0) -> Optional[Node]:
@@ -401,6 +482,7 @@ class LifecycleEngine:
         if self.queued and self.pool.total_idle >= self._min_need:
             self._run_scheduler(now)
         self._maybe_migrate(now)
+        self._retry_serve_scale(now)
         return node
 
     def node_leave(self, node_id: str, now: float = 0.0) -> List[Job]:
@@ -437,15 +519,36 @@ class LifecycleEngine:
         self._oom(job, float(observed_bytes), now)
         return job
 
+    def set_request_rate(self, job_id: int, rate: float,
+                         now: float = 0.0) -> Optional[Job]:
+        """``request_rate_change``: the offered rate of a serve job moved.
+        Closes the current SLO-accounting segment, then lets the
+        autoscaler react — synchronously on the live path, via typed
+        ``scale_up``/``scale_down`` events on the sim path."""
+        job = self.jobs.get(job_id)
+        if job is None or job.kind != "serve" \
+                or job.state in ("done", "failed"):
+            return None
+        self._account_serve(job, now)
+        job.request_rate = float(rate)
+        if job.state == "running":
+            if self.rate_fn is None:
+                self._scale_to(job, self._serve_target(job), now)
+            else:
+                self._schedule_scale(job, now)
+        return job
+
     # ------------------------------------------------------------- sim API
     def run(self, jobs: Sequence[Job],
-            cluster_events: Sequence[ClusterEvent] = ()) -> None:
-        """Event loop over job arrivals + cluster dynamics (sim path).
+            cluster_events: Sequence[ClusterEvent] = (),
+            rate_events: Sequence[RateEvent] = ()) -> None:
+        """Event loop over job arrivals + cluster dynamics + request-rate
+        traces (sim path).
 
         Requires ``rate_fn``.  Event order is (time, seq): arrivals carry
         their job id, trace events and self-scheduled finishes draw from one
-        monotonic counter — with no cluster events this is bit-identical to
-        the seed loop's ordering.
+        monotonic counter — with no cluster/rate events this is
+        bit-identical to the seed loop's ordering.
         """
         assert self.rate_fn is not None, "sim run() needs a rate_fn"
         events = self._events
@@ -456,6 +559,9 @@ class LifecycleEngine:
         for ev in sorted(cluster_events,
                          key=lambda e: (e.time, e.kind, e.node_id)):
             heapq.heappush(events, (ev.time, seq, ev.kind, ev, 0))
+            seq += 1
+        for rev in sorted(rate_events, key=lambda e: (e.time, e.job_id)):
+            heapq.heappush(events, (rev.time, seq, RATE_CHANGE, rev, 0))
             seq += 1
         self._seq = seq
         while events:
@@ -478,6 +584,24 @@ class LifecycleEngine:
                     continue                # stale: job migrated/preempted
                 self.makespan = max(self.makespan, now)
                 self._oom(job, observed, now)
+            elif kind == RATE_CHANGE:
+                self.set_request_rate(payload.job_id, payload.rate, now)
+            elif kind == SCALE_UP:
+                job = payload
+                if epoch != job.epoch or job.state != "running":
+                    continue                # stale: job migrated/preempted
+                self._account_serve(job, now)
+                target = self._serve_target(job)
+                if target > job.serve_replicas:
+                    self._scale_to(job, target, now)
+            elif kind == SCALE_DOWN:
+                job = payload
+                if epoch != job.epoch or job.state != "running":
+                    continue
+                self._account_serve(job, now)
+                target = self._serve_target(job)
+                if target < job.serve_replicas:
+                    self._scale_to(job, target, now)
             elif kind == NODE_JOIN:
                 self.node_join(payload.node, payload.node_id, now)
             elif kind == NODE_LEAVE:
@@ -490,6 +614,8 @@ class LifecycleEngine:
     # ------------------------------------------------------ event handlers
     def _on_arrive(self, now: float, job: Job) -> None:
         self.jobs.setdefault(job.job_id, job)
+        if job.kind == "serve" and job.serve_accounted < 0:
+            job.serve_accounted = now       # queue wait counts against SLO
         self.queued.append(job)
         self._min_need = min(self._min_need, job.min_devices)
         self._run_scheduler(now)
@@ -544,9 +670,12 @@ class LifecycleEngine:
                 self._seq += 1
                 heapq.heappush(self._events,
                                (finish, self._seq, FINISH, job, job.epoch))
+        if job.kind == "serve":
+            self._serve_started(job, start)
         self._track_demotion(job)
 
     def _finish(self, job: Job, now: float) -> None:
+        self._serve_teardown(job, now)
         self.pool.release(job.placements)
         self._unregister(job)
         job.state = "done"
@@ -577,6 +706,7 @@ class LifecycleEngine:
             memtrace.record(job.cfg.family, plan.zero, plan.device_type,
                             plan.pred_bytes, observed, source="oom")
         self._accrue(job, now)
+        self._serve_teardown(job, now)
         self.pool.release(job.placements)
         self._unregister(job)
         job.placements = ()
@@ -607,10 +737,12 @@ class LifecycleEngine:
         if self.queued and self.pool.total_idle >= self._min_need:
             self._run_scheduler(now)
         self._maybe_migrate(now)
+        self._retry_serve_scale(now)
 
     def _preempt(self, job: Job, now: float) -> None:
         """Checkpoint a running job and requeue it with remaining work."""
         self._accrue(job, now)
+        self._serve_teardown(job, now)
         self.pool.release(job.placements)
         self._unregister(job)
         job.placements = ()
@@ -722,10 +854,154 @@ class LifecycleEngine:
             self._mig_cost[job.cfg] = cost
         return cost
 
+    # ------------------------------------------------------------ serving
+    def _serve_teardown(self, job: Job, now: float) -> None:
+        """A serve job is leaving the running state (finish / OOM /
+        preemption): close its SLO segment and drop the replica group —
+        the caller releases ``job.placements`` (still the flattened union
+        of every replica) right after.  No-op for train jobs."""
+        if job.kind != "serve":
+            return
+        self._account_serve(job, now)
+        job.serve_replicas = 0
+        job.replica_placements = []
+        self._serve_backlog.discard(job.job_id)
+
+    def _serve_started(self, job: Job, start: float) -> None:
+        """A serve job was (re)admitted: the admission placement is replica
+        0; compute the per-replica capacity from the shared rate model and
+        scale out to the SLO target (or the pinned static count)."""
+        job.serve_replicas = 1
+        job.replica_placements = [job.placements]
+        if job.cfg is not None and job.plan is not None:
+            job.replica_rate, job.replica_step_s = serve_plan_capacity(
+                job.cfg, job.plan, job.global_batch, job.seq_len)
+        self._account_serve(job, start)
+        # initial provisioning is part of admission (both the autoscaled
+        # and the pinned-static arm start at their full target).  On the
+        # sim path it rides a scale_up event at the start instant rather
+        # than mutating the pool mid-decision-batch — a non-committing
+        # scheduler's remaining decisions were priced against the pool as
+        # the scheduler saw it.
+        if self.rate_fn is not None:
+            self._seq += 1
+            heapq.heappush(self._events,
+                           (start, self._seq, SCALE_UP, job, job.epoch))
+        else:
+            self._scale_to(job, self._serve_target(job), start)
+
+    def _serve_target(self, job: Job) -> int:
+        """Replica target: the SLO model's count, or the pinned static
+        count for ``autoscale=False`` baselines."""
+        if not job.autoscale:
+            return max(job.static_replicas, 1)
+        return replicas_for_slo(job.replica_rate, job.replica_step_s,
+                                job.request_rate, job.slo_p95_s,
+                                max_replicas=job.max_replicas)
+
+    def _schedule_scale(self, job: Job, now: float) -> None:
+        """Emit the typed scale event the new rate calls for (sim path).
+        Scale-ups land after ``scale_up_delay`` (replica provisioning);
+        scale-downs are immediate (releasing capacity is free).  Targets
+        are recomputed at fire time, so a stale event self-cancels."""
+        target = self._serve_target(job)
+        if target > job.serve_replicas:
+            self._seq += 1
+            heapq.heappush(self._events,
+                           (now + self.scale_up_delay, self._seq, SCALE_UP,
+                            job, job.epoch))
+        elif target < job.serve_replicas:
+            self._seq += 1
+            heapq.heappush(self._events,
+                           (now, self._seq, SCALE_DOWN, job, job.epoch))
+
+    def _scale_to(self, job: Job, target: int, now: float) -> None:
+        """Grow/shrink the replica group to ``target`` replicas of the
+        running plan.  Additional replicas are plain pool placements of
+        ``job.plan``; a shortfall (pool too tight) parks the job on the
+        serve backlog, retried whenever capacity frees."""
+        if job.state != "running" or job.plan is None:
+            return
+        target = max(1, min(target, job.max_replicas))
+        changed = False
+        while job.serve_replicas < target:
+            placements = self.pool.find_placements(job.plan)
+            if placements is None:
+                break                       # capacity tight; SLO will show it
+            self.pool.apply(placements)
+            job.replica_placements.append(tuple(placements))
+            job.serve_replicas += 1
+            job.scale_ups += 1
+            self.scale_up_count += 1
+            changed = True
+        released = False
+        while job.serve_replicas > target:
+            replica = job.replica_placements.pop()
+            self.pool.release(replica)
+            job.serve_replicas -= 1
+            job.scale_downs += 1
+            self.scale_down_count += 1
+            changed = released = True
+        if changed:
+            self._unregister(job)
+            job.placements = tuple(p for rep in job.replica_placements
+                                   for p in rep)
+            self._register(job)
+        if job.serve_replicas < target:
+            self._serve_backlog.add(job.job_id)
+        else:
+            self._serve_backlog.discard(job.job_id)
+        if released and self.queued \
+                and self.pool.total_idle >= self._min_need:
+            self._run_scheduler(now)
+
+    def _retry_serve_scale(self, now: float) -> None:
+        """Capacity freed: serve jobs parked below their replica target get
+        another scale attempt.  No-op (one set check) when no serve job is
+        short — the train-only golden path never enters."""
+        if not self._serve_backlog:
+            return
+        for jid in sorted(self._serve_backlog):
+            job = self.jobs.get(jid)
+            if job is None or job.state != "running" \
+                    or job.kind != "serve":
+                self._serve_backlog.discard(jid)
+                continue
+            self._account_serve(job, now)
+            self._scale_to(job, self._serve_target(job), now)
+
+    def _account_serve(self, job: Job, now: float) -> None:
+        """Close the current SLO-accounting segment: between transitions
+        the rate and replica count are constant, so the p95 verdict and
+        the GPU-seconds of the segment are exact."""
+        if job.kind != "serve":
+            return
+        if job.serve_accounted < 0:
+            job.serve_accounted = now
+            return
+        dt = now - job.serve_accounted
+        job.serve_accounted = now
+        if dt <= 0.0:
+            return
+        job.slo_total_s += dt
+        if job.state == "running" and job.serve_replicas > 0:
+            cap = job.serve_replicas * job.replica_rate
+            p95 = p95_token_latency(cap, job.request_rate,
+                                    job.replica_step_s)
+            if p95 <= job.slo_p95_s:
+                job.slo_good_s += dt
+            per_replica = job.plan.n_devices if job.plan is not None else 0
+            job.gpu_seconds += dt * job.serve_replicas * per_replica
+        # queued/preempted segments count as missed: no replicas serving
+
     # ------------------------------------------------------------- helpers
     def _track_demotion(self, job: Job) -> None:
         """(Un)register a running job with the elastic scan, keyed by the
-        fewest devices any better-ranked plan of it would need."""
+        fewest devices any better-ranked plan of it would need.  Serve
+        jobs scale replicas instead of migrating plans — excluded."""
+        if job.kind == "serve":
+            self._demoted.pop(job.job_id, None)
+            return
         if self.elastic and job.plan is not None and job.plan_rank > 0:
             self._demoted[job.job_id] = min(
                 p.n_devices for p in job.plans[:job.plan_rank])

@@ -202,7 +202,85 @@ def required_devices(cfg: ModelConfig, global_batch: int, seq: int,
 # --------------------------------------------------------------- serving ---
 # Beyond-paper: the paper covers training only; the same memory-aware plan
 # machinery applies to serving (bf16 weights + KV/SSM cache instead of the
-# 20 B/param optimizer state).
+# 20 B/param optimizer state).  The rate model here is shared with the SLO
+# autoscaler in ``core.lifecycle``: one replica of a plan decodes at
+# ``serve_plan_rate`` tokens/s in steps of ``serve_step_seconds``, and the
+# p95 token latency of a replica group follows the M/M/1-style queueing
+# approximation in ``p95_token_latency``.
+
+#: p95/mean ratio of the token time-in-system under the exponential
+#: service approximation (ln 20 ~ 3.0): p95 ~ 3 x the mean residence.
+P95_FACTOR = 3.0
+
+#: Default utilisation target behind ``default_serve_slo``: the SLO is set
+#: so one replica meets p95 at 70% load.
+SLO_DEFAULT_UTIL = 0.7
+
+
+def _serve_rate(cfg: ModelConfig, dev: DeviceType, batch: int,
+                step_bytes: float, t: int) -> float:
+    """Decode tokens/s of one (d, t) replica: each step streams the weight
+    slice (2W/t) once per device plus that device's KV/SSM cache slice,
+    and the d*t devices jointly emit ``batch`` tokens — so tokens/s ~
+    batch * decode bandwidth / (weight slice + cache slice).  The
+    bandwidth comes from ``calibration.decode_bw_for`` (raw peak HBM
+    bandwidth when the decode table is off — the seed expression,
+    bit-identical)."""
+    bw = calibration.decode_bw_for(cfg.family, dev.name)
+    return batch * bw / max(step_bytes, 1.0) * _tp_efficiency(t, dev)
+
+
+def serve_plan_capacity(cfg: ModelConfig, plan: ResourcePlan, batch: int,
+                        cache_len: int) -> Tuple[float, float]:
+    """(tokens/s, step seconds) one replica of ``plan`` attains — the
+    per-replica decode capacity the SLO autoscaler divides demand by."""
+    dev = DEVICE_TYPES[plan.device_type]
+    wbytes, cache, _ = mm.serve_bytes_split(cfg, batch, cache_len,
+                                            plan.d, plan.t)
+    rate = _serve_rate(cfg, dev, batch, wbytes + cache, plan.t)
+    return rate, batch / max(rate, 1e-12)
+
+
+def p95_token_latency(capacity_tok_s: float, demand_tok_s: float,
+                      step_seconds: float) -> float:
+    """p95 token time-in-system of a replica group with aggregate capacity
+    ``capacity_tok_s`` under ``demand_tok_s`` load: the M/M/1-style
+    ``P95_FACTOR * step / (1 - rho)`` blow-up, infinite at/over
+    saturation."""
+    if capacity_tok_s <= 0.0:
+        return float("inf")
+    rho = demand_tok_s / capacity_tok_s
+    if rho >= 1.0:
+        return float("inf")
+    return P95_FACTOR * step_seconds / (1.0 - rho)
+
+
+def replicas_for_slo(replica_rate: float, step_seconds: float,
+                     demand_tok_s: float, slo_p95_s: float, *,
+                     max_replicas: int = 64) -> int:
+    """Fewest replicas whose pooled capacity meets the p95 SLO at
+    ``demand_tok_s`` — the autoscaler's target.  Inverts
+    ``p95_token_latency``: p95 <= slo iff utilisation <= 1 - F*step/slo,
+    so n >= demand / (rate * that cap).  Never below 1 (an idle service
+    keeps a warm replica); ``max_replicas`` bounds an unattainable SLO."""
+    if demand_tok_s <= 0.0 or replica_rate <= 0.0:
+        return 1
+    if slo_p95_s <= 0.0:
+        return max_replicas
+    util_cap = 1.0 - P95_FACTOR * step_seconds / slo_p95_s
+    if util_cap <= 0.0:
+        return max_replicas       # SLO tighter than one bare step: saturate
+    need = math.ceil(demand_tok_s / (replica_rate * util_cap) - 1e-9)
+    return max(1, min(int(need), max_replicas))
+
+
+def default_serve_slo(cfg: ModelConfig, plan: ResourcePlan, batch: int,
+                      cache_len: int) -> float:
+    """A p95 target one replica meets at ``SLO_DEFAULT_UTIL`` load — the
+    serverless default when the user names no SLO."""
+    _, step_s = serve_plan_capacity(cfg, plan, batch, cache_len)
+    return P95_FACTOR * step_s / (1.0 - SLO_DEFAULT_UTIL)
+
 
 def predict_serve_plans(cfg: ModelConfig, batch: int, cache_len: int, *,
                         device_types: Optional[Sequence[str]] = None,
@@ -210,12 +288,42 @@ def predict_serve_plans(cfg: ModelConfig, batch: int, cache_len: int, *,
                         max_t: int = 64) -> List[ResourcePlan]:
     """Enumerate (d, t) plans for batched decoding: d shards the request
     batch, t the weights.  Ranked by decode throughput per plan (decode is
-    HBM-bound: rate ~ aggregate HBM bandwidth / bytes touched per token).
+    HBM-bound: rate ~ aggregate HBM bandwidth / bytes touched per token —
+    ``_serve_rate``, shared with the SLO autoscaler).
 
     The memory feedback plane applies here too (serving state is zero=0):
     feasibility and ``min_mem`` use the residual-corrected prediction and
-    the adaptive margin; with it disabled this is the seed sweep."""
-    device_types = list(device_types or DEVICE_TYPES)
+    the adaptive margin; with it (and the decode-bandwidth table) disabled
+    this is the seed sweep, bit-identical."""
+    dts = tuple(device_types) if device_types else tuple(DEVICE_TYPES)
+    return list(_predict_serve_plans_cached(cfg, batch, cache_len, dts,
+                                            max_devices, max_t,
+                                            calibration.cache_token(),
+                                            memtrace.cache_token()))
+
+
+def predict_serve_plans_shared(cfg: ModelConfig, batch: int, cache_len: int,
+                               *, device_types: Optional[Sequence[str]] = None,
+                               max_devices: int = 512,
+                               max_t: int = 64) -> Tuple[ResourcePlan, ...]:
+    """``predict_serve_plans`` returning the memoized tuple itself —
+    identical inputs yield the *same object* (the serve analog of
+    ``predict_plans_shared``), so schedulers can dedupe no-fit checks
+    across serve jobs by plan-list identity."""
+    dts = tuple(device_types) if device_types else tuple(DEVICE_TYPES)
+    return _predict_serve_plans_cached(cfg, batch, cache_len, dts,
+                                       max_devices, max_t,
+                                       calibration.cache_token(),
+                                       memtrace.cache_token())
+
+
+@lru_cache(maxsize=4096)
+def _predict_serve_plans_cached(cfg: ModelConfig, batch: int, cache_len: int,
+                                device_types: Tuple[str, ...],
+                                max_devices: int, max_t: int,
+                                cal_token: Tuple = ("off",),
+                                mem_token: Tuple = ("off",)
+                                ) -> Tuple[ResourcePlan, ...]:
     plans: List[ResourcePlan] = []
     d_candidates = [x for x in _pow2_divisors(batch) if x <= max_devices]
     family = cfg.family
@@ -231,13 +339,7 @@ def predict_serve_plans(cfg: ModelConfig, batch: int, cache_len: int, *,
                 pred = wbytes + cache + work
                 adj = memtrace.corrected_bytes(family, 0, dt_name, pred)
                 if adj < cap:
-                    # each decode step streams the weight slice (2W/t) once
-                    # per device plus that device's KV/SSM cache slice, and
-                    # the d*t devices jointly emit ``batch`` tokens — so
-                    # tokens/s ~ batch * HBM bw / (weight slice + cache slice)
-                    step_bytes = wbytes + cache
-                    rate = batch * dev.hbm_bw / max(step_bytes, 1.0) \
-                        * _tp_efficiency(t, dev)
+                    rate = _serve_rate(cfg, dev, batch, wbytes + cache, t)
                     plans.append(ResourcePlan(
                         n_devices=d * t, min_mem=int(adj / margin) + 1,
                         d=d, t=t, device_type=dt_name, pred_bytes=pred,
@@ -245,4 +347,4 @@ def predict_serve_plans(cfg: ModelConfig, batch: int, cache_len: int, *,
                     break
                 t *= 2
     plans.sort(key=lambda p: (-p.score, p.n_devices, p.t))
-    return plans
+    return tuple(plans)

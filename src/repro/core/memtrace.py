@@ -125,6 +125,7 @@ _samples: List[MemSample] = []
 _stats: Dict[ClassKey, _Stats] = {}
 _margin_stats: Dict[MarginKey, _Stats] = {}
 _seeded: bool = False
+_seeded_paths: set = set()                    # files already ingested
 
 
 def shape_bucket(pred_bytes: float) -> int:
@@ -182,6 +183,7 @@ def reset() -> None:
     _margin_stats.clear()
     _enabled = False
     _seeded = False
+    _seeded_paths.clear()
     _version += 1
 
 
@@ -348,19 +350,40 @@ def seed_from_experiments(out_dir: Optional[str] = None) -> int:
     """Ingest the committed ``launch/memcheck`` ground-truth JSONs
     (mirrors calibration's roofline fallback: CPU-only CI exercises the
     measured path without hardware).  Leaves the enabled flag untouched —
-    seeding is telemetry, not a behaviour change.  Returns rows ingested;
-    idempotent per process unless ``reset`` ran in between."""
+    seeding is telemetry, not a behaviour change.  Returns rows ingested.
+
+    Idempotent at file granularity: every ingested file is remembered (by
+    absolute path, until ``reset``), so repeated calls — module re-import,
+    an explicit call after the import-time seeding, or overlapping
+    ``out_dir`` arguments — never double-ingest a corpus and double-count
+    its residuals.  A missing or empty experiments directory (fresh
+    clones, sdist installs without the committed JSONs) is a clean no-op,
+    not an error."""
     global _seeded
     if _seeded and out_dir is None:
         return 0
-    from repro.configs.registry import get_arch
+    base = out_dir or _EXPERIMENTS_DIR
+    if not os.path.isdir(base):
+        if out_dir is None:
+            _seeded = True                  # nothing to (re)scan later
+        return 0
+    try:
+        from repro.configs.registry import get_arch
+    except Exception:                       # noqa: BLE001 — partial install
+        return 0
     n = 0
-    for path in sorted(glob.glob(os.path.join(out_dir or _EXPERIMENTS_DIR,
+    for path in sorted(glob.glob(os.path.join(base,
                                               "memcheck_zero*.json"))):
+        key = os.path.abspath(path)
+        if key in _seeded_paths:
+            continue
         try:
             with open(path) as f:
                 rows = json.load(f)
         except (OSError, ValueError):
+            continue
+        _seeded_paths.add(key)
+        if not isinstance(rows, list):
             continue
         for r in rows:
             try:

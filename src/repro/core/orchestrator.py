@@ -70,15 +70,46 @@ class Orchestrator:
 
     def _replan(self, job: Job) -> Sequence[ResourcePlan]:
         """Post-OOM ranking refresh against the live catalog + feedback,
-        under the job's original memory model."""
+        under the job's original memory model (serve jobs re-rank through
+        the serve sweep — same corrector, zero=0)."""
         if job.cfg is None or not job.global_batch:
             return job.plans
-        from repro.core.marp import predict_plans
         device_types = sorted({n.device_type for n in self.nodes.values()})
+        if job.kind == "serve":
+            from repro.core.marp import predict_serve_plans
+            return predict_serve_plans(job.cfg, job.global_batch,
+                                       job.seq_len,
+                                       device_types=device_types)
+        from repro.core.marp import predict_plans
         zero = job.plans[0].zero if job.plans else 1
         return predict_plans(job.cfg, job.global_batch, job.seq_len,
                              device_types=device_types, zero=zero,
                              mode=job.plan_mode)
+
+    # -------------------------------------------------------- serving ---
+    def submit_serve(self, plans: Sequence[ResourcePlan], *, cfg=None,
+                     batch: int = 0, cache_len: int = 0,
+                     request_rate: float = 0.0, slo_p95_s: float = 0.0,
+                     autoscale: bool = True,
+                     static_replicas: int = 0) -> Job:
+        """Serve arrival: same admission policy, ``kind="serve"`` — the
+        lifecycle starts one replica and scales the group to the SLO
+        target (or pins ``static_replicas``)."""
+        job = Job(job_id=next(self._ids), plans=plans, cfg=cfg,
+                  global_batch=batch, seq_len=cache_len, kind="serve",
+                  request_rate=float(request_rate),
+                  slo_p95_s=float(slo_p95_s), autoscale=autoscale,
+                  static_replicas=static_replicas)
+        job.arrival = float(next(self._clock))
+        self.engine.submit_job(job, now=job.arrival)
+        return job
+
+    def set_request_rate(self, job_id: int, rate: float) -> Optional[Job]:
+        """Live ``request_rate_change``: the SLO autoscaler immediately
+        rescales the replica group (scale-up may be short if the pool is
+        tight; it is retried whenever capacity frees)."""
+        return self.engine.set_request_rate(job_id, rate,
+                                            now=float(next(self._clock)))
 
     def try_start(self, rec: Job) -> bool:
         """Single-job admission attempt (bypasses queue order)."""

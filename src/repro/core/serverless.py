@@ -7,7 +7,7 @@ capacity churns.  This is what `python -m repro.launch.submit` drives.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Optional, Sequence
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.lifecycle import Job
@@ -36,6 +36,10 @@ class SubmitResult:
         else:
             lines.append(f"  queued ({len(self.plans)} feasible plans,"
                          " awaiting resources)")
+        if self.job.kind == "serve" and self.job.serve_replicas:
+            lines.append(f"  serving: {self.job.serve_replicas} replica(s)"
+                         f" at {self.job.request_rate:.0f} tok/s offered"
+                         f" (p95 target {self.job.slo_p95_s * 1e3:.0f} ms)")
         if self.job.preemptions or self.job.migrations or self.job.ooms:
             lines.append(f"  lifecycle: {self.job.preemptions} preemption(s),"
                          f" {self.job.migrations} migration(s),"
@@ -62,6 +66,33 @@ def submit(orch: Orchestrator, cfg: ModelConfig, train: TrainConfig, *,
             f" {device_types} — the model cannot fit this cluster.")
     rec = orch.submit(plans, cfg=cfg, global_batch=train.global_batch,
                       seq_len=train.seq_len, mode=mode)
+    return SubmitResult(job=rec, plans=plans)
+
+
+def submit_serve(orch: Orchestrator, cfg: ModelConfig, *, batch: int,
+                 cache_len: int, request_rate: float = 0.0,
+                 slo_p95_s: Optional[float] = None, autoscale: bool = True,
+                 static_replicas: int = 0) -> SubmitResult:
+    """Serverless serving submission: no device counts, types, or replica
+    counts from the user — MARP's serve sweep picks the plan, and the SLO
+    autoscaler owns the replica count from there (drive it with
+    ``orch.set_request_rate``).  ``slo_p95_s`` defaults to a p95 target
+    one replica meets at 70% load (``marp.default_serve_slo``)."""
+    from repro.core.marp import default_serve_slo, predict_serve_plans
+    device_types = sorted({n.device_type for n in orch.nodes.values()})
+    plans = predict_serve_plans(cfg, batch, cache_len,
+                                device_types=device_types)
+    if not plans:
+        raise RuntimeError(
+            f"MARP found no feasible serve plan for {cfg.name} at"
+            f" batch={batch} cache_len={cache_len} on device types"
+            f" {device_types} — the model cannot fit this cluster.")
+    if slo_p95_s is None:
+        slo_p95_s = default_serve_slo(cfg, plans[0], batch, cache_len)
+    rec = orch.submit_serve(plans, cfg=cfg, batch=batch,
+                            cache_len=cache_len, request_rate=request_rate,
+                            slo_p95_s=slo_p95_s, autoscale=autoscale,
+                            static_replicas=static_replicas)
     return SubmitResult(job=rec, plans=plans)
 
 

@@ -269,13 +269,31 @@ def gqa_attend_train(cfg: ModelConfig, p: dict, x: jax.Array,
 def gqa_attend_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
                       pos: jax.Array) -> Tuple[jax.Array, dict]:
     """x: (b, 1, d); cache: {'k','v'} of (b, S, K, hd); pos: scalar int32 —
-    the absolute position of the incoming token (ring buffer write at pos % S)."""
+    the absolute position of the incoming token (ring buffer write at
+    pos % S) — or an (b,) int32 vector of per-row positions (continuous
+    batching: each cache slot advances independently)."""
     b, _, d = x.shape
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     S = cache["k"].shape[1]
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if getattr(pos, "ndim", 0):
+        # per-row positions: one-hot ring write + per-row validity mask
+        # (same arithmetic per row as the scalar path below)
+        posv = pos.astype(jnp.int32)
+        q = apply_rope(q, posv[:, None], cfg.rope_theta)
+        k = apply_rope(k, posv[:, None], cfg.rope_theta)
+        slot = (posv % S).astype(jnp.int32)           # (b,)
+        hit = jnp.arange(S)[None, :] == slot[:, None]  # (b, S)
+        k_cache = jnp.where(hit[:, :, None, None], k, cache["k"])
+        v_cache = jnp.where(hit[:, :, None, None], v, cache["v"])
+        idx = jnp.arange(S)
+        age = (slot[:, None] - idx[None, :]) % S
+        valid = age <= jnp.minimum(posv[:, None], S - 1)
+        o = decode_attention(q, k_cache, v_cache, valid)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        return out, {"k": k_cache, "v": v_cache}
     q = apply_rope(q, pos[None].astype(jnp.int32), cfg.rope_theta)
     k = apply_rope(k, pos[None].astype(jnp.int32), cfg.rope_theta)
     slot = (pos % S).astype(jnp.int32)
@@ -368,26 +386,44 @@ def mla_attend_train(cfg: ModelConfig, p: dict, x: jax.Array,
 
 def mla_attend_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
                       pos: jax.Array) -> Tuple[jax.Array, dict]:
-    """Matrix-absorbed MLA decode: scores/value both computed in latent space."""
+    """Matrix-absorbed MLA decode: scores/value both computed in latent
+    space.  ``pos`` is a scalar int32, or an (b,) vector of per-row
+    positions (continuous batching)."""
     b, _, _ = x.shape
     H = cfg.num_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     r_kv = cfg.kv_lora_rank
     S = cache["c_kv"].shape[1]
-    q_nope, q_rope = _mla_q(cfg, p, x, pos[None].astype(jnp.int32))
-    c_new, kr_new = _mla_latent(cfg, p, x, pos[None].astype(jnp.int32))
-    slot = (pos % S).astype(jnp.int32)
-    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new, slot, axis=1)
-    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new, slot, axis=1)
+    if getattr(pos, "ndim", 0):
+        posv = pos.astype(jnp.int32)
+        q_nope, q_rope = _mla_q(cfg, p, x, posv[:, None])
+        c_new, kr_new = _mla_latent(cfg, p, x, posv[:, None])
+        slot = (posv % S).astype(jnp.int32)           # (b,)
+        hit = jnp.arange(S)[None, :] == slot[:, None]  # (b, S)
+        c_kv = jnp.where(hit[:, :, None], c_new, cache["c_kv"])
+        k_rope = jnp.where(hit[:, :, None], kr_new, cache["k_rope"])
+        idx = jnp.arange(S)
+        age = (slot[:, None] - idx[None, :]) % S
+        valid = age <= jnp.minimum(posv[:, None], S - 1)   # (b, S)
+        valid_mask = valid[:, None, :]
+    else:
+        q_nope, q_rope = _mla_q(cfg, p, x, pos[None].astype(jnp.int32))
+        c_new, kr_new = _mla_latent(cfg, p, x, pos[None].astype(jnp.int32))
+        slot = (pos % S).astype(jnp.int32)
+        c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new,
+                                                   slot, axis=1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"],
+                                                     kr_new, slot, axis=1)
+        idx = jnp.arange(S)
+        age = (slot - idx) % S
+        valid = age <= jnp.minimum(pos, S - 1)
+        valid_mask = valid[None, None, :]
     # absorb W^UK into q: q_lat (b,H,r_kv)
     q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], p["wk_b"])
     s_nope = jnp.einsum("bhr,bsr->bhs", q_lat, c_kv)
     s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], k_rope)
     scores = (s_nope + s_rope).astype(jnp.float32) / math.sqrt(dn + dr)
-    idx = jnp.arange(S)
-    age = (slot - idx) % S
-    valid = age <= jnp.minimum(pos, S - 1)
-    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    scores = jnp.where(valid_mask, scores, NEG_INF)
     pr = jax.nn.softmax(scores, axis=-1)
     o_lat = jnp.einsum("bhs,bsr->bhr", pr.astype(c_kv.dtype), c_kv)
     o = jnp.einsum("bhr,rhd->bhd", o_lat, p["wv_b"])

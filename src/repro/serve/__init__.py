@@ -1,1 +1,3 @@
-from repro.serve.engine import prefill, serve_step, greedy_decode  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    prefill, serve_step, greedy_decode, ServeRequest, ContinuousBatcher,
+)

@@ -1,12 +1,24 @@
 """Serving substrate: batched prefill + single-token decode steps with
 sharded KV / SSM-state caches.  ``serve_step`` is what the decode-shape
-dry-runs lower (one new token against a seq_len-deep cache)."""
+dry-runs lower (one new token against a seq_len-deep cache).
+
+``ContinuousBatcher`` is the production decode loop: a fixed pool of
+cache slots decodes in lock-step while finished requests free their slots
+and queued requests are prefilled into them *between* steps (per-row
+positions — the decode path accepts an (b,) position vector, so every
+slot advances independently).  Greedy outputs are bit-for-bit the tokens
+``greedy_decode`` produces for each request alone — slot reuse and
+co-batching change throughput, never results
+(``tests/test_serve_plane.py``)."""
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -46,3 +58,113 @@ def greedy_decode(cfg: ModelConfig, params: Any, prompt: jax.Array,
         tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
         toks.append(tok)
     return jnp.concatenate(toks, axis=1)
+
+
+# ----------------------------------------------------- continuous batching --
+
+@dataclass
+class ServeRequest:
+    """One decode request: a prompt and a token budget."""
+    request_id: int
+    prompt: Any                             # (prompt_len,) int32
+    max_new_tokens: int
+    tokens: List[int] = field(default_factory=list)   # generated so far
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new_tokens
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over one model replica.
+
+    ``slots`` caches decode together; between steps, finished requests
+    release their slot and pending requests are admitted into free slots
+    (prefill writes the new request's cache row in place).  All rows step
+    with their *own* absolute position, so admissions never stall the
+    running batch — the idle-slot rows compute garbage that is masked out
+    and overwritten at the next admission.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int,
+                 cache_len: int, jit: bool = True):
+        self.cfg, self.params = cfg, params
+        self.slots, self.cache_len = slots, cache_len
+        self.cache = init_cache(cfg, slots, cache_len)
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self.pos = np.zeros((slots,), np.int64)       # next absolute position
+        self.active: List[Optional[ServeRequest]] = [None] * slots
+        self.pending: Deque[ServeRequest] = deque()
+        self.finished: Dict[int, ServeRequest] = {}
+        self.decode_steps = 0
+        self.prefills = 0
+        step = lambda p, tok, cache, pos: decode_step(cfg, p, tok, cache, pos)
+        self._step = jax.jit(step) if jit else step
+
+    # ------------------------------------------------------------ intake --
+    def submit(self, request: ServeRequest) -> None:
+        assert request.prompt.ndim == 1, "prompt must be a 1-D token vector"
+        assert (request.prompt.shape[0] + self.cfg.num_modal_tokens
+                + request.max_new_tokens) <= self.cache_len, \
+            "request cannot fit the cache"
+        self.pending.append(request)
+
+    def _admit(self) -> None:
+        """Fill free slots from the pending queue (between decode steps)."""
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.pending:
+                continue
+            req = self.pending.popleft()
+            batch = {"tokens": req.prompt[None]}
+            if self.cfg.num_modal_tokens:
+                batch["modal_embeds"] = jnp.zeros(
+                    (1, self.cfg.num_modal_tokens, self.cfg.d_model),
+                    jnp.bfloat16)
+            logits, row_cache = prefill(self.cfg, self.params, batch,
+                                        self.cache_len)
+            self.prefills += 1
+            tok = int(jnp.argmax(logits[0, -1, :]))
+            req.tokens.append(tok)
+            if req.done:                     # budget of one: no decode steps
+                self.finished[req.request_id] = req
+                continue
+            # splice the prefilled cache into this slot's row (axis 1 is
+            # the batch axis of every (nb, b, ...) cache leaf)
+            self.cache = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=1),
+                self.cache, row_cache)
+            self.tokens = self.tokens.at[slot, 0].set(tok)
+            self.pos[slot] = req.prompt.shape[0] + self.cfg.num_modal_tokens
+            self.active[slot] = req
+
+    # ------------------------------------------------------------- drive --
+    def step(self) -> bool:
+        """Admit, then run one lock-step decode over all slots.  Returns
+        False once no request is active or pending."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return bool(self.pending)
+        logits, self.cache = self._step(self.params, self.tokens, self.cache,
+                                        jnp.asarray(self.pos, jnp.int32))
+        self.decode_steps += 1
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        # one batched feed-back: idle-slot rows carry garbage regardless
+        # (masked out and overwritten at admission), so no scatter needed
+        self.tokens = next_tok[:, None].astype(jnp.int32)
+        harvested = np.asarray(next_tok)
+        for slot in live:
+            req = self.active[slot]
+            req.tokens.append(int(harvested[slot]))
+            self.pos[slot] += 1
+            if req.done:                    # slot frees for the next admit
+                self.finished[req.request_id] = req
+                self.active[slot] = None
+        return True
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain every submitted request; returns {request_id: tokens}."""
+        while self.step():
+            pass
+        return {rid: req.tokens for rid, req in sorted(self.finished.items())}

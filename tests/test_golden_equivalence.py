@@ -566,6 +566,77 @@ def test_simulation_memtrace_off_identical_after_round_trip():
     memtrace.seed_from_experiments()
 
 
+def test_simulation_serve_free_identical_after_serve_run():
+    """Serving is additive: running a full serve-autoscaling simulation
+    (rate events, scale events, replica groups) must leave a subsequent
+    serve-free simulation bit-identical to the seed event loop — every
+    serve mechanism keys off ``kind="serve"`` jobs and none may leak
+    state into the shared pool/scheduler path."""
+    from repro.cluster.traces import serve_workload
+    nodes = make_cluster(PAPER_SIM_CLUSTER)
+    types = sorted({n.device_type for n in nodes})
+    want = _seed_simulate(new_workload(30, types, seed=13),
+                          copy.deepcopy(nodes))
+    sjobs, revs = serve_workload(4, types, horizon=3600.0, seed=1)
+    sres = simulate(sjobs, copy.deepcopy(nodes), FrenzyScheduler(),
+                    charge_overhead=False, rate_events=revs)
+    assert sres.scale_ups > 0               # the serve machinery actually ran
+    got = simulate(new_workload(30, types, seed=13), copy.deepcopy(nodes),
+                   FrenzyScheduler(), charge_overhead=False).jobs
+    for w, g in zip(sorted(want, key=lambda j: j.job_id),
+                    sorted(got, key=lambda j: j.job_id)):
+        assert g.placements == w.placements, w.job_id
+        assert g.start_time == w.start_time, w.job_id
+        assert g.finish_time == w.finish_time, w.job_id
+        assert g.rate == w.rate, w.job_id
+
+
+def test_predict_serve_plans_decode_table_round_trip_stays_golden():
+    """The serve rate-model refactor routes bandwidth through
+    ``calibration.decode_bw_for``: with the decode table off the sweep
+    must stay bit-identical to the seed expression, including after an
+    enable/disable round trip (the shared serve-plan tuple identity
+    included)."""
+    from repro.core import calibration
+    from repro.core.marp import predict_serve_plans, \
+        predict_serve_plans_shared
+    cfg = ARCHS["gpt2-350m"]
+    kw = dict(device_types=["A100-40G", "v5e"])
+    base = predict_serve_plans(cfg, 16, 2048, **kw)
+    shared = predict_serve_plans_shared(cfg, 16, 2048, **kw)
+    calibration.enable_decode({("A100-40G", "*"): 0.2, ("v5e", "*"): 0.9})
+    try:
+        assert predict_serve_plans(cfg, 16, 2048, **kw) != base
+    finally:
+        calibration.disable_decode()
+    assert predict_serve_plans(cfg, 16, 2048, **kw) == base
+    assert predict_serve_plans_shared(cfg, 16, 2048, **kw) is shared
+
+
+def test_calibration_disable_one_table_invalidates_memoized_plans():
+    """With *both* calibration tables enabled, disabling only one must
+    still invalidate memoized rankings — the shared token stays
+    ``("on", v)`` while either table is live, so each disable has to bump
+    the version or stale plans are served (regression: disable_decode()
+    once left the decode-scaled serve ranking in the cache)."""
+    from repro.core import calibration
+    from repro.core.marp import predict_serve_plans
+    cfg = ARCHS["gpt2-350m"]
+    kw = dict(device_types=["A100-40G", "v5e"])
+    base = predict_serve_plans(cfg, 16, 2048, **kw)
+    calibration.enable({("A100-40G", "*"): 0.9})
+    calibration.enable_decode({("A100-40G", "*"): 0.2, ("v5e", "*"): 0.9})
+    try:
+        scaled = predict_serve_plans(cfg, 16, 2048, **kw)
+        assert scaled != base
+        calibration.disable_decode()        # MFU table still enabled
+        assert predict_serve_plans(cfg, 16, 2048, **kw) == base
+    finally:
+        calibration.disable_decode()
+        calibration.disable()
+    assert predict_serve_plans(cfg, 16, 2048, **kw) == base
+
+
 def test_predict_plans_cache_key_invalidation():
     """Every key component must reach the cache key: changing it changes
     the result (or at least misses the cache)."""

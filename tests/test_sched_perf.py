@@ -9,9 +9,10 @@ import copy
 import time
 
 from benchmarks.sched_scale import make_scaled_cluster as _scaled_cluster
-from repro.cluster.schedulers import FrenzyScheduler
+from repro.cluster.schedulers import FrenzyScheduler, SiaScheduler
 from repro.cluster.simulator import simulate
-from repro.cluster.traces import scale_workload
+from repro.cluster.traces import new_workload, scale_workload
+from repro.core.orchestrator import PAPER_SIM_CLUSTER, make_cluster
 
 
 def test_simulate_1k_jobs_on_1k_nodes_fast():
@@ -42,3 +43,28 @@ def test_scheduler_overhead_does_not_scale_with_nodes():
                        FrenzyScheduler(), charge_overhead=False)
         best = min(best, res.sched_time_s / res.sched_calls)
     assert best < 500e-6, f"scheduler call scales with cluster: {best*1e6:.0f}us"
+
+
+def test_sia_ilp_queue_depth_does_not_blow_up():
+    """The Sia branch & bound once cost ~80x more per call at q16 than at
+    q8 (and *seconds* at q32): an incumbent of -1 left the bound useless
+    until deep in the tree, and the optimistic bound itself was O(jobs)
+    per node.  With the greedy warm start + suffix bounds + node budget,
+    q16 solves exactly in single-digit milliseconds and q32/q48 are
+    budget-capped near ~0.1 s.  Bounds are ~100x above the measured cost
+    so only a real regression (e.g. losing the warm start) trips them."""
+    nodes = make_cluster(PAPER_SIM_CLUSTER)
+    nodes_by_id = {n.node_id: n for n in nodes}
+    types = sorted({n.device_type for n in nodes})
+    for n_jobs, bound_s in ((16, 0.5), (48, 10.0)):
+        jobs = new_workload(n_jobs, types, seed=11, mean_interarrival=0.001)
+        sched = SiaScheduler()
+        best = float("inf")
+        for _ in range(2):
+            for n in nodes_by_id.values():
+                n.idle = n.total
+            t0 = time.perf_counter()
+            sched.schedule(list(jobs), nodes_by_id)
+            best = min(best, time.perf_counter() - t0)
+        assert best < bound_s, \
+            f"Sia ILP blowup returned: q{n_jobs} took {best:.2f}s"

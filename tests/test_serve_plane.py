@@ -1,0 +1,390 @@
+"""Serving plane: continuous batching, the SLO autoscaler lifecycle, the
+serve rate model, and the seeding bugfixes that rode along.
+
+Three layers:
+* decode correctness — the continuous batcher's slot reuse produces the
+  exact greedy tokens the batch-at-once loop produces per request;
+* control plane — serve jobs round-trip submit -> rate spike -> scale_up
+  -> rate drop -> scale_down -> finish through both the sim and the live
+  lifecycle, with consistent pool accounting;
+* golden — ``predict_serve_plans`` after the rate-model refactor is
+  bit-identical to the seed sweep with every feedback plane off.
+"""
+import math
+
+import pytest
+
+from repro.cluster.schedulers import FrenzyScheduler
+from repro.cluster.simulator import RateEvent, SimJob, simulate
+from repro.configs.registry import ARCHS
+from repro.core import calibration, memtrace, serverless
+from repro.core import memory_model as mm
+from repro.core.devices import DEVICE_TYPES
+from repro.core.lifecycle import Job
+from repro.core.marp import (ResourcePlan, _pow2_divisors, _tp_efficiency,
+                             default_serve_slo, p95_token_latency,
+                             predict_serve_plans, predict_serve_plans_shared,
+                             replicas_for_slo, serve_plan_capacity,
+                             P95_FACTOR)
+from repro.core.orchestrator import Orchestrator, make_cluster
+
+
+# --------------------------------------------------------------------------
+# continuous batching: slot reuse must not change greedy outputs
+
+def _decode_all(cfg, params, prompts, gen, cache_len):
+    from repro.serve import greedy_decode
+    return {i: greedy_decode(cfg, params, prompts[i:i + 1], gen,
+                             cache_len)[0].tolist()
+            for i in range(prompts.shape[0])}
+
+
+@pytest.fixture(scope="module")
+def llama_smoke():
+    import jax
+    from repro.configs.registry import smoke_config
+    from repro.models import init_params
+    cfg = smoke_config("llama3.2-3b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_continuous_batching_matches_batch_at_once(llama_smoke):
+    """4 requests through 2 slots: admissions land mid-decode of other
+    rows and every slot is reused — outputs must equal the per-request
+    reference loop exactly."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import ContinuousBatcher, ServeRequest
+    cfg, params = llama_smoke
+    gen, prompt_len, cache_len = 5, 8, 16
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (4, prompt_len), 0,
+                                 cfg.vocab_size, jnp.int32)
+    want = _decode_all(cfg, params, prompts, gen, cache_len)
+    cb = ContinuousBatcher(cfg, params, slots=2, cache_len=cache_len)
+    for i in range(prompts.shape[0]):
+        cb.submit(ServeRequest(i, prompts[i], gen))
+    got = cb.run()
+    assert got == want
+    assert cb.prefills == 4
+    # 2 slots x 4 requests of 4 decode steps each cannot fit in one wave
+    assert cb.decode_steps >= 8
+
+
+def test_continuous_batching_staggered_and_unequal(llama_smoke):
+    """Requests submitted while the batch is mid-flight, with unequal
+    token budgets (slots free at different steps)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import ContinuousBatcher, ServeRequest
+    cfg, params = llama_smoke
+    cache_len = 16
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (3, 8), 0,
+                                 cfg.vocab_size, jnp.int32)
+    gens = [5, 2, 4]
+    want = {i: _decode_all(cfg, params, prompts[i:i + 1], gens[i],
+                           cache_len)[0] for i in range(3)}
+    cb = ContinuousBatcher(cfg, params, slots=2, cache_len=cache_len)
+    cb.submit(ServeRequest(0, prompts[0], gens[0]))
+    cb.step()
+    cb.submit(ServeRequest(1, prompts[1], gens[1]))
+    cb.step()
+    cb.submit(ServeRequest(2, prompts[2], gens[2]))
+    got = cb.run()
+    assert got == want
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["deepseek-v2-236b", "mamba2-130m"])
+def test_continuous_batching_other_families(arch):
+    """MLA (per-row latent ring writes) and SSM (position-free state)
+    families through the same slot-reuse path."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.registry import smoke_config
+    from repro.models import init_params
+    from repro.serve import ContinuousBatcher, ServeRequest
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (3, 6), 0,
+                                 cfg.vocab_size, jnp.int32)
+    want = _decode_all(cfg, params, prompts, 4, 16)
+    cb = ContinuousBatcher(cfg, params, slots=2, cache_len=16)
+    for i in range(3):
+        cb.submit(ServeRequest(i, prompts[i], 4))
+    assert cb.run() == want
+
+
+# --------------------------------------------------------------------------
+# the serve rate model / SLO policy
+
+def test_p95_latency_model_shape():
+    step = 0.05
+    cap = 100.0
+    assert p95_token_latency(cap, 0.0, step) == pytest.approx(
+        P95_FACTOR * step)
+    assert p95_token_latency(cap, 50.0, step) == pytest.approx(
+        P95_FACTOR * step / 0.5)
+    assert p95_token_latency(cap, 100.0, step) == float("inf")
+    assert p95_token_latency(cap, 200.0, step) == float("inf")
+    assert p95_token_latency(0.0, 10.0, step) == float("inf")
+
+
+def test_replicas_for_slo_monotone_and_sufficient():
+    rate, step = 200.0, 0.05
+    slo = P95_FACTOR * step / 0.3            # one replica good to 70% load
+    last = 0
+    for demand in (0.0, 50.0, 120.0, 300.0, 700.0, 1500.0):
+        n = replicas_for_slo(rate, step, demand, slo)
+        assert n >= max(last, 1)
+        last = n
+        # the returned count actually meets the SLO...
+        assert p95_token_latency(n * rate, demand, step) <= slo * (1 + 1e-9)
+        # ...and is minimal
+        if n > 1:
+            assert p95_token_latency((n - 1) * rate, demand, step) \
+                > slo * (1 - 1e-9)
+    assert replicas_for_slo(rate, step, 1e9, slo, max_replicas=16) == 16
+    # SLO tighter than a bare decode step: saturate, don't loop
+    assert replicas_for_slo(rate, step, 10.0, step * 0.1,
+                            max_replicas=8) == 8
+
+
+def test_serve_plan_capacity_consistent_with_plan_score():
+    cfg = ARCHS["gpt2-350m"]
+    plans = predict_serve_plans(cfg, 16, 2048,
+                                device_types=["A100-40G", "v5e"])
+    assert plans
+    for plan in plans[:4]:
+        rate, step = serve_plan_capacity(cfg, plan, 16, 2048)
+        assert rate > 0 and step > 0
+        assert rate * step == pytest.approx(16)          # batch per step
+        assert plan.score == pytest.approx(rate / plan.n_devices ** 0.9)
+
+
+# --------------------------------------------------------------------------
+# golden: the refactored serve sweep is the seed sweep with feedback off
+
+def _seed_predict_serve_plans(cfg, batch, cache_len, device_types,
+                              max_devices=512, max_t=64):
+    """Verbatim copy of the pre-refactor ``predict_serve_plans`` sweep."""
+    plans = []
+    d_candidates = [x for x in _pow2_divisors(batch) if x <= max_devices]
+    family = cfg.family
+    for dt_name in device_types:
+        dev = DEVICE_TYPES[dt_name]
+        margin = memtrace.margin_for(family, 0, dt_name)
+        cap = dev.mem * margin
+        for d in d_candidates:
+            t = 1
+            while t <= max_t and d * t <= max_devices:
+                wbytes, cache, work = mm.serve_bytes_split(cfg, batch,
+                                                           cache_len, d, t)
+                pred = wbytes + cache + work
+                adj = memtrace.corrected_bytes(family, 0, dt_name, pred)
+                if adj < cap:
+                    step_bytes = wbytes + cache
+                    rate = batch * dev.hbm_bw / max(step_bytes, 1.0) \
+                        * _tp_efficiency(t, dev)
+                    plans.append(ResourcePlan(
+                        n_devices=d * t, min_mem=int(adj / margin) + 1,
+                        d=d, t=t, device_type=dt_name, pred_bytes=pred,
+                        score=rate / ((d * t) ** 0.9), zero=0))
+                    break
+                t *= 2
+    plans.sort(key=lambda p: (-p.score, p.n_devices, p.t))
+    return plans
+
+
+def test_predict_serve_plans_identical_to_seed():
+    memtrace.disable()
+    calibration.disable_decode()
+    for arch in ("gpt2-350m", "gpt2-7b", "mixtral-8x22b", "mamba2-130m"):
+        cfg = ARCHS[arch]
+        for batch, cache_len in ((8, 1024), (16, 2048), (64, 4096)):
+            for dts in (["A100-40G"], ["v5e", "RTX3090", "A100-80G"]):
+                want = _seed_predict_serve_plans(cfg, batch, cache_len, dts)
+                got = predict_serve_plans(cfg, batch, cache_len,
+                                          device_types=dts)
+                assert got == want, (arch, batch, cache_len, dts)
+
+
+def test_predict_serve_plans_shared_identity():
+    cfg = ARCHS["gpt2-350m"]
+    a = predict_serve_plans_shared(cfg, 16, 2048, device_types=["v5e"])
+    b = predict_serve_plans_shared(cfg, 16, 2048, device_types=["v5e"])
+    assert a is b
+    lst = predict_serve_plans(cfg, 16, 2048, device_types=["v5e"])
+    assert list(a) == lst and lst is not a   # fresh list per plain call
+
+
+# --------------------------------------------------------------------------
+# lifecycle round trip: submit -> spike -> scale_up -> drop -> scale_down
+
+def _serve_job(cfg, nodes, *, batch=16, cache_len=1024, horizon=3600.0,
+               util=0.6):
+    types = sorted({n.device_type for n in nodes})
+    plans = predict_serve_plans_shared(cfg, batch, cache_len,
+                                       device_types=tuple(types),
+                                       max_devices=64)
+    assert plans
+    rate, step = serve_plan_capacity(cfg, plans[0], batch, cache_len)
+    slo = default_serve_slo(cfg, plans[0], batch, cache_len)
+    base = rate * util
+    job = SimJob(job_id=0, arrival=0.0, cfg=cfg, global_batch=batch,
+                 seq_len=cache_len, total_samples=int(horizon), plans=plans,
+                 kind="serve", request_rate=base, slo_p95_s=slo)
+    return job, base
+
+
+def test_serve_lifecycle_round_trip_sim():
+    cfg = ARCHS["gpt2-350m"]
+    nodes = make_cluster([(4, 4, "A100-40G")])
+    job, base = _serve_job(cfg, nodes)
+    events = [RateEvent(time=600.0, job_id=0, rate=base * 6.0),
+              RateEvent(time=1800.0, job_id=0, rate=base * 0.5)]
+    res = simulate([job], nodes, FrenzyScheduler(), charge_overhead=False,
+                   rate_events=events)
+    assert job.state == "done"
+    assert job.finish_time == pytest.approx(3600.0)
+    assert res.scale_ups >= 1 and res.scale_downs >= 1
+    assert job.scale_ups >= 1 and job.scale_downs >= 1
+    assert job.serve_replicas == 0           # finish released every replica
+    assert job.slo_total_s == pytest.approx(3600.0)
+    assert 0.0 <= res.slo_attainment <= 1.0
+    assert res.serve_gpu_seconds > 0
+    # with warm-pool scaling the SLO held through the spike
+    assert res.slo_attainment == pytest.approx(1.0)
+
+
+def test_serve_scale_up_delay_costs_attainment():
+    """A cold-provisioning delay makes the burst window count against the
+    SLO until the replicas land — strictly worse attainment than the
+    warm pool, never better GPU-seconds accounting confusion."""
+    cfg = ARCHS["gpt2-350m"]
+    nodes = make_cluster([(4, 4, "A100-40G")])
+    job, base = _serve_job(cfg, nodes)
+    events = [RateEvent(time=600.0, job_id=0, rate=base * 6.0),
+              RateEvent(time=1800.0, job_id=0, rate=base * 0.5)]
+    res = simulate([job], nodes, FrenzyScheduler(), charge_overhead=False,
+                   rate_events=events, scale_up_delay=120.0)
+    assert job.state == "done"
+    assert res.slo_attainment < 1.0
+    assert res.slo_attainment >= 0.9         # only the ramp is missed
+
+
+def test_serve_backlog_retries_when_capacity_frees():
+    """A spike the pool cannot absorb parks the job on the serve backlog;
+    a train job finishing frees capacity and the group completes its
+    scale-out without a new rate event."""
+    cfg = ARCHS["gpt2-350m"]
+    nodes = make_cluster([(2, 4, "A100-40G")])
+    job, base = _serve_job(cfg, nodes, horizon=4000.0)
+    types = sorted({n.device_type for n in nodes})
+    from repro.core.marp import predict_plans_shared
+    tplans = predict_plans_shared(cfg, 32, 1024,
+                                  device_types=tuple(types), max_devices=8)
+    assert tplans
+    # train job occupies most of the pool until t ~ 1000
+    train = SimJob(job_id=1, arrival=1.0, cfg=cfg, global_batch=32,
+                   seq_len=1024, total_samples=1, plans=tplans)
+    rate_fn_probe = []
+    events = [RateEvent(time=5.0, job_id=0, rate=base * 7.0)]
+    res = simulate([job, train], nodes, FrenzyScheduler(),
+                   charge_overhead=False, rate_events=events)
+    del rate_fn_probe
+    assert job.state == "done" and train.state == "done"
+    # the spike target exceeded what the shared pool could give at t=5,
+    # yet replicas kept growing after the train job released its devices
+    assert job.scale_ups >= 1
+    assert res.slo_attainment > 0.0
+
+
+def test_serve_lifecycle_round_trip_live():
+    cfg = ARCHS["gpt2-350m"]
+    orch = Orchestrator(make_cluster([(4, 4, "A100-40G")]))
+    total = sum(n.total for n in orch.nodes.values())
+    result = serverless.submit_serve(orch, cfg, batch=16, cache_len=1024,
+                                     request_rate=0.0)
+    job = result.job
+    assert result.started and job.kind == "serve"
+    assert job.serve_replicas == 1
+    per_replica = job.plan.n_devices
+    rate, step = serve_plan_capacity(cfg, job.plan, 16, 1024)
+    assert "serving: 1 replica(s)" in result.describe()
+    # spike: replicas grow and the pool charges them
+    orch.set_request_rate(job.job_id, rate * 5.0)
+    assert job.serve_replicas > 1
+    assert orch.idle_devices() == total - job.serve_replicas * per_replica
+    assert len(job.replica_placements) == job.serve_replicas
+    # drop: surplus replicas return to the pool (floor of one stays)
+    orch.set_request_rate(job.job_id, 0.0)
+    assert job.serve_replicas == 1
+    assert orch.idle_devices() == total - per_replica
+    # finish: everything comes back
+    orch.release(job.job_id)
+    assert job.state == "done"
+    assert orch.idle_devices() == total
+    assert job.gpu_seconds >= 0.0
+
+
+def test_serve_job_preemption_round_trip_live():
+    """node_leave preempts the whole replica group; the job re-admits on
+    the surviving nodes and scales back toward its target."""
+    cfg = ARCHS["gpt2-350m"]
+    orch = Orchestrator(make_cluster([(3, 4, "A100-40G")]))
+    result = serverless.submit_serve(orch, cfg, batch=16, cache_len=1024)
+    job = result.job
+    rate, _ = serve_plan_capacity(cfg, job.plan, 16, 1024)
+    orch.set_request_rate(job.job_id, rate * 4.0)
+    assert job.serve_replicas > 1
+    victim = job.placements[0][0]
+    preempted = orch.node_leave(victim)
+    assert job in preempted or job.state == "running"
+    # whatever happened, pool accounting stayed consistent
+    used = sum(k for _, k in job.placements)
+    assert orch.idle_devices() == \
+        sum(n.total for n in orch.nodes.values()) - used
+    if job.state == "running":
+        assert len(job.replica_placements) == job.serve_replicas
+        assert all(nid != victim for nid, _ in job.placements)
+
+
+# --------------------------------------------------------------------------
+# memtrace seeding (satellite bugfix)
+
+def test_memtrace_seeding_idempotent_and_tolerant(tmp_path):
+    try:
+        memtrace.reset()
+        n1 = memtrace.seed_from_experiments()
+        assert n1 > 0                        # the committed corpus exists
+        assert len(memtrace.samples()) == n1
+        # repeated calls — implicit and with an explicit overlapping dir —
+        # must not double-ingest
+        assert memtrace.seed_from_experiments() == 0
+        from repro.core.memtrace import _EXPERIMENTS_DIR
+        assert memtrace.seed_from_experiments(out_dir=_EXPERIMENTS_DIR) == 0
+        assert len(memtrace.samples()) == n1
+        # missing and empty directories are clean no-ops
+        assert memtrace.seed_from_experiments(
+            out_dir=str(tmp_path / "missing")) == 0
+        empty = tmp_path / "empty"
+        empty.mkdir()
+        assert memtrace.seed_from_experiments(out_dir=str(empty)) == 0
+        # malformed files are skipped, not fatal, and not retried
+        bad = tmp_path / "bad"
+        bad.mkdir()
+        (bad / "memcheck_zero0.json").write_text("{not json")
+        (bad / "memcheck_zero1.json").write_text('{"a": 1}')
+        assert memtrace.seed_from_experiments(out_dir=str(bad)) == 0
+        assert len(memtrace.samples()) == n1
+    finally:
+        memtrace.reset()
+        memtrace.seed_from_experiments()     # restore the shared corpus
+
+
+def test_memtrace_reset_allows_reseed():
+    memtrace.reset()
+    assert len(memtrace.samples()) == 0
+    n = memtrace.seed_from_experiments()
+    assert n > 0 and len(memtrace.samples()) == n
