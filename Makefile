@@ -2,21 +2,27 @@
 #
 #   make tier1        fast test suite (the driver's tier-1 gate)
 #   make tier1-fast   tier1 minus tests marked `slow`
-#   make bench-smoke  benchmark grid, slow corners trimmed
+#   make bench-smoke  benchmark grid, slow corners trimmed, then diffed
+#                     against the committed BENCH_*.json baseline
+#                     (benchmarks/compare.py fails on >25% key-row drops)
 #   make bench        full benchmark grid (tens of seconds)
-#   make bench-json   full grid, rows recorded to BENCH_<date>.json
-#                     (the perf trajectory; commit the files that matter)
+#   make bench-json   full grid, rows recorded to BENCH_<date>.json —
+#                     never clobbers an existing same-day file (appends
+#                     .2, .3, ... so the perf trajectory keeps every run)
+#   make bench-compare  compare a fresh --skip-slow grid to the baseline
 #   make memcheck     regenerate experiments/memcheck JSONs (XLA compiles;
 #                     both ZeRO stages — they seed the memory feedback
 #                     plane at import, so commit the refreshed files)
 #   make serve-smoke  serving plane end-to-end smoke: the SLO-autoscaling
 #                     benchmark's quick cell plus a tiny continuous-
-#                     batching decode on the local backend
+#                     batching decode on the local backend — run both
+#                     unified and disaggregated (prefill/decode split)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 tier1-fast bench-smoke bench bench-json memcheck serve-smoke
+.PHONY: tier1 tier1-fast bench-smoke bench bench-json bench-compare \
+	memcheck serve-smoke
 
 tier1:
 	$(PY) -m pytest -x -q
@@ -25,13 +31,21 @@ tier1-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
 bench-smoke:
-	$(PY) -m benchmarks.run --skip-slow
+	$(PY) -m benchmarks.run --skip-slow --json $${TMPDIR:-/tmp}/bench_smoke.json
+	$(PY) -m benchmarks.compare --fresh $${TMPDIR:-/tmp}/bench_smoke.json
 
 bench:
 	$(PY) -m benchmarks.run
 
 bench-json:
-	$(PY) -m benchmarks.run --json BENCH_$$(date +%Y%m%d).json
+	@f=BENCH_$$(date +%Y%m%d).json; n=1; \
+	while [ -e "$$f" ]; do n=$$((n+1)); \
+		f=BENCH_$$(date +%Y%m%d).$$n.json; done; \
+	echo "writing $$f"; \
+	$(PY) -m benchmarks.run --json "$$f"
+
+bench-compare:
+	$(PY) -m benchmarks.compare
 
 memcheck:
 	$(PY) -m repro.launch.memcheck --zero 0 --force
@@ -43,3 +57,5 @@ serve-smoke:
 		--prompt-len 16 --gen 8
 	$(PY) -m repro.launch.serve --arch llama3.2-3b --smoke --batch 2 \
 		--prompt-len 16 --gen 8 --continuous 5
+	$(PY) -m repro.launch.serve --arch llama3.2-3b --smoke --batch 2 \
+		--prompt-len 16 --gen 8 --continuous 5 --disaggregated

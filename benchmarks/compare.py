@@ -1,0 +1,185 @@
+"""Benchmark regression gate: diff a fresh ``benchmarks.run --json`` run
+against the committed ``BENCH_*.json`` trajectory and exit non-zero when
+a key row regresses by more than the threshold.
+
+    PYTHONPATH=src python -m benchmarks.compare --fresh /tmp/bench.json
+        [--baseline BENCH_20260808.json] [--threshold 0.25]
+
+Without ``--fresh`` the fresh grid is produced in-process
+(``benchmarks.run --skip-slow --json`` into a temp file).  Without
+``--baseline`` the newest ``BENCH_*.json`` at the repo root is used.
+
+Key rows and their direction are declared in ``KEY_RULES`` — scheduler
+overhead and kernel timings (lower ``us_per_call`` is better), JCT
+reductions / SLO attainment / GPU-savings / serving throughput (higher
+``derived`` is better), and modeled p95 latency (lower is better).
+Sub-millisecond timing rows are *skipped, loudly*: across CI machines
+they measure jitter, not regressions.  Rows present in only one file are
+reported but do not fail the gate (grids legitimately grow); a fresh run
+with ``failed_suites`` always fails.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from typing import Callable, List, Optional, Tuple
+
+#: timing rows below this are CI jitter, not signal (skipped + logged)
+MIN_TIMING_US = 1000.0
+
+#: (predicate over row name, metric, direction) — first match wins.
+#: metric: "us" = us_per_call, "derived" = the derived column (numeric).
+KEY_RULES: Tuple[Tuple[Callable[[str], bool], str, str], ...] = (
+    (lambda n: n.startswith("sched_overhead/frenzy/"), "us", "lower"),
+    (lambda n: n.startswith("sched_scale/frenzy/"), "us", "lower"),
+    (lambda n: n.startswith("kernels/") and n.endswith("_1k"),
+     "us", "lower"),
+    (lambda n: n.startswith("kernels/decode_"), "us", "lower"),
+    (lambda n: "/jct_reduction_vs_" in n, "derived", "higher"),
+    (lambda n: n.startswith("serve_autoscale/") and "/slo_" in n,
+     "derived", "higher"),
+    (lambda n: n.endswith("/gpu_s_saving"), "derived", "higher"),
+    (lambda n: "/tok_per_dev_s_" in n, "derived", "higher"),
+    (lambda n: "/p95_latency_" in n, "derived", "lower"),
+)
+
+
+def classify(name: str) -> Optional[Tuple[str, str]]:
+    for pred, metric, direction in KEY_RULES:
+        if pred(name):
+            return metric, direction
+    return None
+
+
+def _rows(payload: dict) -> dict:
+    return {r["name"]: r for r in payload["rows"]}
+
+
+def _value(row: dict, metric: str) -> Optional[float]:
+    raw = row["us_per_call"] if metric == "us" else row["derived"]
+    try:
+        return float(raw)
+    except (TypeError, ValueError):
+        return None
+
+
+def compare(base: dict, fresh: dict, threshold: float
+            ) -> Tuple[List[str], List[str]]:
+    """Returns (regressions, notes) over the key rows of ``base``."""
+    regressions, notes = [], []
+    brows, frows = _rows(base), _rows(fresh)
+    for name in sorted(set(brows) | set(frows)):
+        key = classify(name)
+        if key is None:
+            continue
+        metric, direction = key
+        if name not in frows:
+            notes.append(f"key row only in baseline (not failing): {name}")
+            continue
+        if name not in brows:
+            notes.append(f"new key row (no baseline yet): {name}")
+            continue
+        b = _value(brows[name], metric)
+        f = _value(frows[name], metric)
+        if b is None or f is None:
+            notes.append(f"non-numeric key row skipped: {name}")
+            continue
+        if metric == "us" and b < MIN_TIMING_US:
+            notes.append(f"sub-ms timing row skipped (jitter): {name}"
+                         f" ({b:.1f}us)")
+            continue
+        if direction == "lower":
+            bad = f > b * (1.0 + threshold) and f - b > 1e-12
+        else:
+            bad = f < b * (1.0 - threshold) - 1e-12
+        arrow = f"{b:.4g} -> {f:.4g}"
+        if bad:
+            regressions.append(
+                f"{name}: {metric} {arrow} ({direction} is better,"
+                f" >{threshold:.0%} off baseline)")
+        else:
+            notes.append(f"ok: {name} {metric} {arrow}")
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="",
+                    help="committed BENCH_*.json (default: newest at the"
+                         " repo root)")
+    ap.add_argument("--fresh", default="",
+                    help="fresh benchmarks.run --json output (default:"
+                         " run --skip-slow now)")
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get("BENCH_COMPARE_THRESHOLD",
+                                                 0.25)),
+                    help="relative regression tolerance (default 0.25)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also print per-row ok/skip notes")
+    args = ap.parse_args(argv)
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    baseline_path = args.baseline
+    if not baseline_path:
+        cands = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+        if not cands:
+            print("compare: no committed BENCH_*.json baseline", flush=True)
+            return 2
+        baseline_path = cands[-1]
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+
+    fresh_path = args.fresh
+    tmp = None
+    if not fresh_path:
+        tmp = tempfile.NamedTemporaryFile(suffix=".json", delete=False)
+        tmp.close()
+        fresh_path = tmp.name
+        cmd = [sys.executable, "-m", "benchmarks.run", "--skip-slow",
+               "--json", fresh_path]
+        # a failing fresh run is itself the regression signal: keep going
+        # and let failed_suites below report it
+        subprocess.run(cmd, cwd=root, check=False)
+    try:
+        with open(fresh_path) as fh:
+            fresh = json.load(fh)
+    finally:
+        if tmp is not None:
+            os.unlink(tmp.name)
+
+    regressions, notes = compare(base, fresh, args.threshold)
+    if fresh.get("failed_suites"):
+        regressions.insert(
+            0, f"fresh run had failed suites: {fresh['failed_suites']}")
+    if base.get("backend") != fresh.get("backend"):
+        notes.append(f"backend differs: baseline {base.get('backend')}"
+                     f" vs fresh {fresh.get('backend')} — timing rows are"
+                     f" cross-machine, read with care")
+
+    print(f"compare: baseline {os.path.basename(baseline_path)}"
+          f" ({len(base['rows'])} rows) vs fresh ({len(fresh['rows'])}"
+          f" rows), threshold {args.threshold:.0%}")
+    if args.verbose:
+        for n in notes:
+            print(f"  {n}")
+    else:
+        skipped = [n for n in notes if not n.startswith("ok: ")]
+        for n in skipped:
+            print(f"  {n}")
+    if regressions:
+        print(f"REGRESSIONS ({len(regressions)}):")
+        for r in regressions:
+            print(f"  {r}")
+        return 1
+    n_ok = sum(1 for n in notes if n.startswith("ok: "))
+    print(f"no key-row regressions ({n_ok} rows within threshold)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -110,6 +110,41 @@ def run():
     rows.append(("kernels/ssd_scan_pallas_interpret_ok", 0.0,
                  float(jnp.isfinite(y.astype(jnp.float32)).all())))
 
+    # decode attention: batch x 1 query against a cache-length sweep —
+    # dispatched (ref on CPU, split-KV Pallas on TPU) vs the direct ref
+    # call, the serving-side analogue of the dispatch_attention rows above
+    from repro.kernels.flash_decode import flash_decode_gqa
+    from repro.kernels.flash_decode.ref import gqa_decode_ref
+    bq, Hq, Kq, Dq = 8, 8, 2, 64
+    impl_fd, _ = dispatch.resolve("flash_decode")
+    for S in (1024, 4096):
+        ks = jax.random.split(jax.random.PRNGKey(S), 4)
+        qd = jax.random.normal(ks[0], (bq, 1, Hq, Dq), jnp.bfloat16)
+        kc = jax.random.normal(ks[1], (bq, S, Kq, Dq), jnp.bfloat16)
+        vc = jax.random.normal(ks[2], (bq, S, Kq, Dq), jnp.bfloat16)
+        valid = jnp.ones((bq, S), bool)
+        # step bytes: the decode step streams the KV cache once per token
+        cache_gb = 2 * kc.size * kc.dtype.itemsize / 1e9
+        f_ref = jax.jit(lambda q, k, v, m: gqa_decode_ref(q, k, v, m))
+        us_r = _time(f_ref, qd, kc, vc, valid)
+        rows.append((f"kernels/decode_attention_direct_s{S}", us_r,
+                     round(cache_gb / (us_r * 1e-6), 1)))
+        f_dis = jax.jit(lambda q, k, v, m: dispatch.flash_decode(q, k, v, m))
+        us_d = _time(f_dis, qd, kc, vc, valid)
+        rows.append((f"kernels/decode_attention_{impl_fd}_s{S}", us_d,
+                     round(cache_gb / (us_d * 1e-6), 1)))
+    # split-KV Pallas kernel in interpret mode: numerics vs the ref
+    qs_ = jax.random.normal(key, (2, 1, 4, 32), jnp.float32)
+    kc_ = jax.random.normal(jax.random.PRNGKey(1), (2, 320, 4, 32),
+                            jnp.float32)
+    vc_ = jax.random.normal(jax.random.PRNGKey(2), (2, 320, 4, 32),
+                            jnp.float32)
+    vm_ = jnp.ones((2, 320), bool)
+    err_fd = float(jnp.max(jnp.abs(
+        flash_decode_gqa(qs_, kc_, vc_, vm_, block_s=128, interpret=True)
+        - gqa_decode_ref(qs_, kc_, vc_, vm_))))
+    rows.append(("kernels/flash_decode_pallas_interpret_err", 0.0, err_fd))
+
     from repro.kernels.adam_update import adam_update_fused
     n = 1 << 16
     g = jax.random.normal(key, (n,))

@@ -78,6 +78,12 @@ def main() -> None:
     if failed:
         print(f"# FAILED suites: {[n for n, _ in failed]}", file=sys.stderr)
         raise SystemExit(1)
+    if not rows:
+        # an `--only` typo (or every suite filtered away) must not read
+        # as a green run — nothing was measured
+        print(f"# no rows produced (--only={args.only!r} matched no"
+              f" suite)", file=sys.stderr)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

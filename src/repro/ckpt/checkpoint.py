@@ -37,6 +37,23 @@ def migration_seconds(cfg, bandwidth: float = 16 * 2 ** 30) -> float:
     return 2.0 * state_bytes(cfg) / float(bandwidth)
 
 
+def kv_handoff_bytes(cfg, batch: int, cache_len: int) -> float:
+    """KV/SSM-cache bytes one prefilled request batch occupies — what a
+    prefill replica ships to a decode replica in disaggregated serving."""
+    from repro.core.memory_model import serve_bytes_split
+    _, cache, _ = serve_bytes_split(cfg, batch, cache_len, 1, 1)
+    return float(cache)
+
+
+def kv_handoff_seconds(cfg, batch: int, cache_len: int,
+                       bandwidth: float = 16 * 2 ** 30) -> float:
+    """Priced prefill->decode KV-cache handoff: the same two-sided
+    send + receive pattern as ``migration_seconds``, applied to the
+    request's cache slice instead of the training state.  MARP charges
+    this per request so a disaggregated plan never looks free."""
+    return 2.0 * kv_handoff_bytes(cfg, batch, cache_len) / float(bandwidth)
+
+
 def _flatten(tree: Any):
     import jax
     leaves, treedef = jax.tree_util.tree_flatten(tree)

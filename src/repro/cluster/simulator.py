@@ -85,6 +85,30 @@ class SimResult:
         return sum(j.gpu_seconds for j in self.serve_jobs)
 
     @property
+    def serve_p95_latency(self) -> float:
+        """Time-weighted mean of the modeled p95 token latency over served
+        segments (NaN with none) — the latency cell of
+        ``benchmarks/serve_autoscale.py``."""
+        obs = sum(j.p95_obs_s for j in self.serve_jobs)
+        if obs <= 0.0:
+            return float("nan")
+        return sum(j.p95_weight_s for j in self.serve_jobs) / obs
+
+    @property
+    def serve_tokens(self) -> float:
+        """Decode tokens actually served (demand capped by capacity)."""
+        return sum(j.tokens_served for j in self.serve_jobs)
+
+    @property
+    def serve_tok_per_device_s(self) -> float:
+        """Serving throughput per device-second — tokens served over the
+        GPU-seconds both pools consumed (NaN with no serve time)."""
+        gpu_s = self.serve_gpu_seconds
+        if gpu_s <= 0.0:
+            return float("nan")
+        return self.serve_tokens / gpu_s
+
+    @property
     def avg_jct(self) -> float:
         done = self.finished
         if not done:                        # churn can starve every job

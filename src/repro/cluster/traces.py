@@ -242,7 +242,7 @@ SERVE_SIZES = ("gpt2-124m", "gpt2-350m", "gpt2-774m")
 def serve_workload(n_jobs: int, device_types: Sequence[str], *,
                    horizon: float = 4 * 3600.0, seed: int = 0,
                    trace: str = "bursty", peak_mult: float = 6.0,
-                   static: bool = False
+                   static: bool = False, disaggregated: bool = False
                    ) -> Tuple[List[SimJob], List[RateEvent]]:
     """Serve jobs + their request-rate traces for the co-scheduling sim.
 
@@ -254,7 +254,13 @@ def serve_workload(n_jobs: int, device_types: Sequence[str], *,
     replica count a static deployment would provision for the trace peak
     (``autoscale=False``) — the baseline arm of
     ``benchmarks/serve_autoscale.py``.  Traces are deterministic per
-    seed and identical across the two arms."""
+    seed and identical across the two arms.
+
+    ``disaggregated=True`` marks every job for prefill/decode pool
+    disaggregation: request shape (prompt length, decode budget) derives
+    from the cache length *without consuming rng draws*, and the prefill
+    pool gets its own ``role="prefill"`` plan ranking — so the unified
+    and disaggregated arms see bit-identical jobs and rate traces."""
     rng = random.Random(700 + seed)
     jobs: List[SimJob] = []
     rate_events: List[RateEvent] = []
@@ -288,6 +294,13 @@ def serve_workload(n_jobs: int, device_types: Sequence[str], *,
                      total_samples=max(int(horizon - t), 1),
                      plans=plans, kind="serve", request_rate=curve[0][1],
                      slo_p95_s=slo)
+        if disaggregated:
+            job.disaggregated = True
+            job.avg_prompt_len = cache_len // 2
+            job.avg_new_tokens = max(cache_len // 4, 1)
+            job.prefill_plans = predict_serve_plans_shared(
+                cfg, batch, cache_len, device_types=tuple(device_types),
+                max_devices=64, role="prefill")
         if static:
             job.autoscale = False
             job.static_replicas = replicas_for_slo(

@@ -166,6 +166,18 @@ def measured_decode_eff(tok_per_s: float, cfg: ModelConfig, batch: int,
     return min(max(achieved_bw / dev.hbm_bw, 0.01), 1.0)
 
 
+def measured_prefill_eff(tok_per_s: float, cfg: ModelConfig,
+                         n_devices: int, dev: DeviceType) -> float:
+    """Achieved fraction of peak FLOPs from a measured prefill throughput
+    — the compute-bound MFU the prefill-pool rate model assumes
+    (``marp._prefill_rate``: 2 flops per active param per prompt token).
+    Clamped like ``measured_mfu`` so one noisy run cannot poison a
+    calibration table."""
+    from repro.core.marp import _active_analytic
+    achieved = tok_per_s * 2.0 * _active_analytic(cfg)
+    return _clamp(achieved / (n_devices * dev.flops))
+
+
 def _clamp(x: float) -> float:
     return min(max(x, MIN_MFU), MAX_MFU)
 

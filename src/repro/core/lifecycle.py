@@ -81,7 +81,8 @@ from typing import (Callable, Dict, Iterable, List, Optional, Sequence, Set,
 
 from repro.core import memtrace
 from repro.core.has import Allocation, ClusterPool, Node
-from repro.core.marp import (ResourcePlan, p95_token_latency,
+from repro.core.marp import (ResourcePlan, default_ttft_slo,
+                             p95_token_latency, prefill_service_seconds,
                              replicas_for_slo, serve_plan_capacity)
 
 # Event kinds (the typed event set).
@@ -155,6 +156,22 @@ class Job:
     slo_total_s: float = 0.0                # seconds since arrival accounted
     gpu_seconds: float = 0.0                # device-seconds consumed serving
     serve_accounted: float = -1.0           # last SLO-accounting timestamp
+    p95_weight_s: float = 0.0               # integral of modeled p95 over
+    p95_obs_s: float = 0.0                  #   served segments (+ their dt)
+    tokens_served: float = 0.0              # integral of min(rate, capacity)
+    # disaggregated serving (opt-in: the prefill pool only exists when
+    # ``disaggregated`` is set; everything below stays dormant otherwise
+    # and the decode path above is bit-identical to the unified group)
+    disaggregated: bool = False
+    avg_prompt_len: float = 0.0             # prompt tokens per request
+    avg_new_tokens: float = 0.0             # decode tokens per request
+    slo_ttft_s: float = 0.0                 # p95 time-to-first-token target
+    prefill_plans: Sequence[ResourcePlan] = ()   # role="prefill" ranking
+    prefill_plan: Optional[ResourcePlan] = None  # pool's running plan
+    prefill_replicas: int = 0               # live prefill replica count
+    prefill_placements: List[Tuple[Tuple[str, int], ...]] = \
+        field(default_factory=list)
+    prefill_service_s: float = 0.0          # prompt forward + KV handoff
 
     @property
     def slo_attainment(self) -> float:
@@ -592,7 +609,8 @@ class LifecycleEngine:
                     continue                # stale: job migrated/preempted
                 self._account_serve(job, now)
                 target = self._serve_target(job)
-                if target > job.serve_replicas:
+                if target > job.serve_replicas \
+                        or self._prefill_target(job) > job.prefill_replicas:
                     self._scale_to(job, target, now)
             elif kind == SCALE_DOWN:
                 job = payload
@@ -600,7 +618,8 @@ class LifecycleEngine:
                     continue
                 self._account_serve(job, now)
                 target = self._serve_target(job)
-                if target < job.serve_replicas:
+                if target < job.serve_replicas \
+                        or self._prefill_target(job) < job.prefill_replicas:
                     self._scale_to(job, target, now)
             elif kind == NODE_JOIN:
                 self.node_join(payload.node, payload.node_id, now)
@@ -865,6 +884,8 @@ class LifecycleEngine:
         self._account_serve(job, now)
         job.serve_replicas = 0
         job.replica_placements = []
+        job.prefill_replicas = 0
+        job.prefill_placements = []
         self._serve_backlog.discard(job.job_id)
 
     def _serve_started(self, job: Job, start: float) -> None:
@@ -876,6 +897,21 @@ class LifecycleEngine:
         if job.cfg is not None and job.plan is not None:
             job.replica_rate, job.replica_step_s = serve_plan_capacity(
                 job.cfg, job.plan, job.global_batch, job.seq_len)
+        if job.disaggregated and job.cfg is not None:
+            # the prefill pool runs its own (role="prefill") plan; absent a
+            # ranking, it reuses the decode plan shape.  Per-request service
+            # time is one prompt forward plus the priced KV handoff, and an
+            # unset TTFT target defaults to the one-replica/70%-load p95.
+            job.prefill_plan = (job.prefill_plans[0] if job.prefill_plans
+                                else job.plan)
+            if job.prefill_plan is not None:
+                job.prefill_service_s = prefill_service_seconds(
+                    job.cfg, job.prefill_plan, job.avg_prompt_len,
+                    handoff_bandwidth=self.migration_bandwidth)
+                if job.slo_ttft_s <= 0.0:
+                    job.slo_ttft_s = default_ttft_slo(
+                        job.cfg, job.prefill_plan, job.avg_prompt_len,
+                        handoff_bandwidth=self.migration_bandwidth)
         self._account_serve(job, start)
         # initial provisioning is part of admission (both the autoscaled
         # and the pinned-static arm start at their full target).  On the
@@ -899,18 +935,38 @@ class LifecycleEngine:
                                 job.request_rate, job.slo_p95_s,
                                 max_replicas=job.max_replicas)
 
+    def _prefill_target(self, job: Job) -> int:
+        """Prefill-pool replica target (0 unless disaggregated).  Sized
+        independently of the decode pool: demand is the request *arrival*
+        rate (decode tokens/s over tokens-per-request), service is one
+        prompt forward plus the priced KV handoff, and the same
+        ``replicas_for_slo`` inversion applies against the TTFT target."""
+        if not job.disaggregated or job.prefill_plan is None:
+            return 0
+        if not job.autoscale:
+            return max(job.static_replicas, 1)
+        service_s = max(job.prefill_service_s, 1e-9)
+        req_s = job.request_rate / max(job.avg_new_tokens, 1.0)
+        return replicas_for_slo(1.0 / service_s, service_s, req_s,
+                                job.slo_ttft_s,
+                                max_replicas=job.max_replicas)
+
     def _schedule_scale(self, job: Job, now: float) -> None:
         """Emit the typed scale event the new rate calls for (sim path).
         Scale-ups land after ``scale_up_delay`` (replica provisioning);
         scale-downs are immediate (releasing capacity is free).  Targets
-        are recomputed at fire time, so a stale event self-cancels."""
+        are recomputed at fire time, so a stale event self-cancels.
+        Either pool (decode, or prefill when disaggregated) moving is
+        enough to emit."""
         target = self._serve_target(job)
-        if target > job.serve_replicas:
+        pf_target = self._prefill_target(job)
+        if target > job.serve_replicas or pf_target > job.prefill_replicas:
             self._seq += 1
             heapq.heappush(self._events,
                            (now + self.scale_up_delay, self._seq, SCALE_UP,
                             job, job.epoch))
-        elif target < job.serve_replicas:
+        elif target < job.serve_replicas \
+                or pf_target < job.prefill_replicas:
             self._seq += 1
             heapq.heappush(self._events,
                            (now, self._seq, SCALE_DOWN, job, job.epoch))
@@ -942,12 +998,34 @@ class LifecycleEngine:
             job.scale_downs += 1
             self.scale_down_count += 1
             changed = released = True
+        # disaggregated: the prefill pool scales on the same transitions,
+        # against its own TTFT-derived target (non-disaggregated jobs have
+        # target 0 == prefill_replicas — this block never runs for them)
+        pf_target = self._prefill_target(job)
+        while job.prefill_replicas < pf_target:
+            placements = self.pool.find_placements(job.prefill_plan)
+            if placements is None:
+                break                       # capacity tight; TTFT will show it
+            self.pool.apply(placements)
+            job.prefill_placements.append(tuple(placements))
+            job.prefill_replicas += 1
+            job.scale_ups += 1
+            self.scale_up_count += 1
+            changed = True
+        while job.prefill_replicas > pf_target:
+            replica = job.prefill_placements.pop()
+            self.pool.release(replica)
+            job.prefill_replicas -= 1
+            job.scale_downs += 1
+            self.scale_down_count += 1
+            changed = released = True
         if changed:
             self._unregister(job)
             job.placements = tuple(p for rep in job.replica_placements
-                                   for p in rep)
+                                   for p in rep) \
+                + tuple(p for rep in job.prefill_placements for p in rep)
             self._register(job)
-        if job.serve_replicas < target:
+        if job.serve_replicas < target or job.prefill_replicas < pf_target:
             self._serve_backlog.add(job.job_id)
         else:
             self._serve_backlog.discard(job.job_id)
@@ -988,10 +1066,34 @@ class LifecycleEngine:
             cap = job.serve_replicas * job.replica_rate
             p95 = p95_token_latency(cap, job.request_rate,
                                     job.replica_step_s)
-            if p95 <= job.slo_p95_s:
+            good = p95 <= job.slo_p95_s
+            if job.disaggregated:
+                # both pools must hold: the decode p95 above, and the
+                # prefill pool's TTFT under the same queueing model with
+                # per-request service = prompt forward + KV handoff
+                if job.prefill_replicas > 0:
+                    req_s = job.request_rate / max(job.avg_new_tokens, 1.0)
+                    service_s = max(job.prefill_service_s, 1e-9)
+                    ttft = p95_token_latency(
+                        job.prefill_replicas / service_s, req_s, service_s)
+                    good = good and ttft <= job.slo_ttft_s
+                else:
+                    good = False            # no prefill pool: nothing admits
+            if good:
                 job.slo_good_s += dt
             per_replica = job.plan.n_devices if job.plan is not None else 0
-            job.gpu_seconds += dt * job.serve_replicas * per_replica
+            devs = job.serve_replicas * per_replica
+            if job.disaggregated and job.prefill_plan is not None:
+                devs += job.prefill_replicas * job.prefill_plan.n_devices
+            job.gpu_seconds += dt * devs
+            # benchmark telemetry (pure accumulation, decisions unchanged):
+            # time-weighted modeled p95 (capped so saturated segments stay
+            # finite) and tokens actually served under the capacity limit
+            p95_cap = (10.0 * job.slo_p95_s if job.slo_p95_s > 0.0
+                       else 30.0 * max(job.replica_step_s, 1e-9))
+            job.p95_weight_s += dt * min(p95, p95_cap)
+            job.p95_obs_s += dt
+            job.tokens_served += dt * min(job.request_rate, cap)
         # queued/preempted segments count as missed: no replicas serving
 
     # ------------------------------------------------------------- helpers

@@ -230,6 +230,61 @@ def _serve_rate(cfg: ModelConfig, dev: DeviceType, batch: int,
     return batch * bw / max(step_bytes, 1.0) * _tp_efficiency(t, dev)
 
 
+def _prefill_rate(cfg: ModelConfig, dev: DeviceType, d: int, t: int) -> float:
+    """Prompt tokens/s of one (d, t) replica during prefill.  Prefill is
+    compute-bound (a full forward over the prompt: ~2 flops per active
+    param per token), so the rate follows the calibrated MFU and parallel
+    efficiencies rather than the HBM stream that governs decode."""
+    mfu = calibration.mfu_for(cfg.family, dev.name)
+    eff = mfu * _tp_efficiency(t, dev) * _dp_efficiency(d)
+    return dev.flops * eff * d * t / (2.0 * _active_analytic(cfg))
+
+
+def prefill_service_seconds(cfg: ModelConfig, plan: ResourcePlan,
+                            prompt_len: float, *,
+                            handoff_bandwidth: float = 16 * 2 ** 30
+                            ) -> float:
+    """Seconds one replica of a prefill-pool ``plan`` spends per request:
+    the forward pass over the prompt **plus** the priced KV-cache handoff
+    to the decode pool (``ckpt.checkpoint.kv_handoff_seconds`` — the
+    ``migration_seconds`` cost-model pattern), so MARP charges the
+    disaggregation transfer honestly instead of treating it as free."""
+    from repro.ckpt.checkpoint import kv_handoff_seconds
+    dev = DEVICE_TYPES[plan.device_type]
+    rate = _prefill_rate(cfg, dev, plan.d, plan.t)
+    return (prompt_len / max(rate, 1e-9)
+            + kv_handoff_seconds(cfg, 1, int(math.ceil(prompt_len)),
+                                 handoff_bandwidth))
+
+
+def prefill_pool_target(cfg: ModelConfig, plan: ResourcePlan,
+                        request_rate_tok_s: float, avg_prompt_len: float,
+                        avg_new_tokens: float, slo_ttft_s: float, *,
+                        max_replicas: int = 64,
+                        handoff_bandwidth: float = 16 * 2 ** 30) -> int:
+    """Prefill-pool size for a disaggregated serve job: demand is the
+    request *arrival* rate times the prompt length (the decode token rate
+    divided by tokens-per-request gives arrivals), service time is one
+    prompt forward plus the KV handoff, and the same
+    ``replicas_for_slo`` inversion sizes the pool against the
+    time-to-first-token SLO."""
+    service_s = prefill_service_seconds(cfg, plan, avg_prompt_len,
+                                        handoff_bandwidth=handoff_bandwidth)
+    req_s = request_rate_tok_s / max(avg_new_tokens, 1.0)
+    return replicas_for_slo(1.0 / max(service_s, 1e-9), service_s, req_s,
+                            slo_ttft_s, max_replicas=max_replicas)
+
+
+def default_ttft_slo(cfg: ModelConfig, plan: ResourcePlan,
+                     avg_prompt_len: float, *,
+                     handoff_bandwidth: float = 16 * 2 ** 30) -> float:
+    """TTFT p95 target one prefill replica meets at ``SLO_DEFAULT_UTIL``
+    load — the disaggregated analog of ``default_serve_slo``."""
+    service_s = prefill_service_seconds(cfg, plan, avg_prompt_len,
+                                        handoff_bandwidth=handoff_bandwidth)
+    return P95_FACTOR * service_s / (1.0 - SLO_DEFAULT_UTIL)
+
+
 def serve_plan_capacity(cfg: ModelConfig, plan: ResourcePlan, batch: int,
                         cache_len: int) -> Tuple[float, float]:
     """(tokens/s, step seconds) one replica of ``plan`` attains — the
@@ -285,7 +340,8 @@ def default_serve_slo(cfg: ModelConfig, plan: ResourcePlan, batch: int,
 def predict_serve_plans(cfg: ModelConfig, batch: int, cache_len: int, *,
                         device_types: Optional[Sequence[str]] = None,
                         max_devices: int = 512,
-                        max_t: int = 64) -> List[ResourcePlan]:
+                        max_t: int = 64,
+                        role: str = "decode") -> List[ResourcePlan]:
     """Enumerate (d, t) plans for batched decoding: d shards the request
     batch, t the weights.  Ranked by decode throughput per plan (decode is
     HBM-bound: rate ~ aggregate HBM bandwidth / bytes touched per token —
@@ -299,13 +355,14 @@ def predict_serve_plans(cfg: ModelConfig, batch: int, cache_len: int, *,
     return list(_predict_serve_plans_cached(cfg, batch, cache_len, dts,
                                             max_devices, max_t,
                                             calibration.cache_token(),
-                                            memtrace.cache_token()))
+                                            memtrace.cache_token(), role))
 
 
 def predict_serve_plans_shared(cfg: ModelConfig, batch: int, cache_len: int,
                                *, device_types: Optional[Sequence[str]] = None,
-                               max_devices: int = 512,
-                               max_t: int = 64) -> Tuple[ResourcePlan, ...]:
+                               max_devices: int = 512, max_t: int = 64,
+                               role: str = "decode"
+                               ) -> Tuple[ResourcePlan, ...]:
     """``predict_serve_plans`` returning the memoized tuple itself —
     identical inputs yield the *same object* (the serve analog of
     ``predict_plans_shared``), so schedulers can dedupe no-fit checks
@@ -314,7 +371,7 @@ def predict_serve_plans_shared(cfg: ModelConfig, batch: int, cache_len: int,
     return _predict_serve_plans_cached(cfg, batch, cache_len, dts,
                                        max_devices, max_t,
                                        calibration.cache_token(),
-                                       memtrace.cache_token())
+                                       memtrace.cache_token(), role)
 
 
 @lru_cache(maxsize=4096)
@@ -322,8 +379,15 @@ def _predict_serve_plans_cached(cfg: ModelConfig, batch: int, cache_len: int,
                                 device_types: Tuple[str, ...],
                                 max_devices: int, max_t: int,
                                 cal_token: Tuple = ("off",),
-                                mem_token: Tuple = ("off",)
+                                mem_token: Tuple = ("off",),
+                                role: str = "decode"
                                 ) -> Tuple[ResourcePlan, ...]:
+    # role axis (disaggregated serving): "decode" ranks by the HBM-bound
+    # decode stream (the seed sweep, bit-identical); "prefill" ranks the
+    # same feasible (d, t) grid by compute-bound prompt tokens/s.  Memory
+    # feasibility is shared — a prefill replica holds the same weights and
+    # writes the same cache rows it hands off.
+    assert role in ("decode", "prefill"), role
     plans: List[ResourcePlan] = []
     d_candidates = [x for x in _pow2_divisors(batch) if x <= max_devices]
     family = cfg.family
@@ -339,7 +403,9 @@ def _predict_serve_plans_cached(cfg: ModelConfig, batch: int, cache_len: int,
                 pred = wbytes + cache + work
                 adj = memtrace.corrected_bytes(family, 0, dt_name, pred)
                 if adj < cap:
-                    rate = _serve_rate(cfg, dev, batch, wbytes + cache, t)
+                    rate = (_serve_rate(cfg, dev, batch, wbytes + cache, t)
+                            if role == "decode"
+                            else _prefill_rate(cfg, dev, d, t))
                     plans.append(ResourcePlan(
                         n_devices=d * t, min_mem=int(adj / margin) + 1,
                         d=d, t=t, device_type=dt_name, pred_bytes=pred,

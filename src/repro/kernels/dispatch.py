@@ -1,7 +1,7 @@
 """Backend-dispatched kernel registry — the data-plane fast path.
 
-Every compute hot-spot (``attention``, ``ssd_scan``, ``adam_update``)
-registers two implementations:
+Every compute hot-spot (``attention``, ``flash_decode``, ``ssd_scan``,
+``adam_update``) registers two implementations:
 
 * ``pallas`` — the TPU kernel (``repro.kernels.*``), with block sizes
   resolved through a per-process autotune cache keyed on
@@ -206,6 +206,62 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
                                    softmax_scale=softmax_scale)
 
 
+def _flash_decode_ref(kind, *args, **kw):
+    from repro.kernels.flash_decode import ref
+    fn = ref.gqa_decode_ref if kind == "gqa" else ref.mla_decode_ref
+    return fn(*args, **kw)
+
+
+def _flash_decode_pallas(kind, *args, **kw):
+    from repro.kernels.flash_decode import (flash_decode_gqa,
+                                            flash_decode_mla)
+    if kind == "gqa":
+        q, k_cache, v_cache, valid = args
+        fn = flash_decode_gqa
+        dims = (q.shape[0], k_cache.shape[1], q.shape[2], q.shape[3])
+    else:
+        q_lat, q_rope, c_kv, k_rope, valid = args
+        fn = flash_decode_mla
+        dims = (q_lat.shape[0], c_kv.shape[1], q_lat.shape[1],
+                c_kv.shape[2])
+
+    def thunk_for(params):
+        def thunk():
+            return fn(*args, **kw, **params).block_until_ready()
+        return thunk
+
+    # the cache length (dims[1]) is a first-class shape-bucket axis: the
+    # best split width depends on how many KV blocks there are to split
+    params = autotuned(
+        "flash_decode", dims, args[0].dtype,
+        candidates=[{"block_s": bs} for bs in (128, 256, 512, 1024)],
+        default={"block_s": 256}, exact=(kind,),
+        make_thunk=thunk_for if _concrete(*args) else None)
+    return fn(*args, **kw, **params)
+
+
+def flash_decode(q, k_cache, v_cache, valid, *,
+                 softmax_scale: Optional[float] = None):
+    """Single-token GQA attention over a (ring) KV cache.
+
+    q: (b, 1, H, D); k_cache, v_cache: (b, S, K, D); valid: (b, S) bool.
+    Returns (b, 1, H, D).  TPU: split-KV Pallas kernel (parallel over
+    cache blocks, two-pass online-softmax reduction); CPU/GPU: ref
+    bit-identical to the seed ``decode_attention``."""
+    return resolve("flash_decode")[1]("gqa", q, k_cache, v_cache, valid,
+                                      softmax_scale=softmax_scale)
+
+
+def mla_flash_decode(q_lat, q_rope, c_kv, k_rope, valid, *, denom: float):
+    """Matrix-absorbed MLA latent decode attention.
+
+    q_lat: (b, H, r); q_rope: (b, H, dr); c_kv: (b, S, r); k_rope:
+    (b, S, dr); valid: (b, S) bool; denom = sqrt(dn + dr).  Returns
+    o_lat (b, H, r)."""
+    return resolve("flash_decode")[1]("mla", q_lat, q_rope, c_kv, k_rope,
+                                      valid, denom=denom)
+
+
 def _ssd_ref(x, dt_raw, A_log, B, C, D, dt_bias, *, chunk: int = 128):
     from repro.models.mamba2 import ssd_chunked
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + dt_bias)
@@ -283,5 +339,6 @@ def adam_update_leaf(g, m, v, master, *, lr, beta1: float, beta2: float,
 
 
 register("attention", pallas=_attention_pallas, ref=_attention_ref)
+register("flash_decode", pallas=_flash_decode_pallas, ref=_flash_decode_ref)
 register("ssd_scan", pallas=_ssd_pallas, ref=_ssd_ref)
 register("adam_update", pallas=_adam_pallas, ref=_adam_ref)

@@ -1,0 +1,5 @@
+from repro.kernels.flash_decode.flash_decode import (flash_decode_gqa,
+                                                     flash_decode_mla)
+from repro.kernels.flash_decode import ref
+
+__all__ = ["flash_decode_gqa", "flash_decode_mla", "ref"]

@@ -1,0 +1,130 @@
+"""Reference implementations for the split-KV flash-decode op.
+
+``gqa_decode_ref`` / ``mla_decode_ref`` are the CPU/GPU production paths:
+they reproduce the pre-dispatch decode math from ``models/attention.py``
+expression-for-expression (whole-cache softmax), so routing the decode
+call sites through ``kernels.dispatch`` changes nothing off-TPU —
+tests/test_flash_decode.py holds seed-verbatim goldens.  The decode score
+matrix is (b, K, G, S) — a few hundred KB even at long context — so
+chunking the softmax on CPU would buy no memory and break bit-identity
+(a two-pass partial-sum associates the reduction differently).
+
+``gqa_decode_splitk`` / ``mla_decode_splitk`` are the chunked two-pass
+split-KV computation in pure jnp — the same partials + running-max
+rescale the Pallas kernel emits, kept here as the readable oracle the
+kernel is validated against (tolerance, not bit-identity: the split
+changes the reduction order).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------ bit-identical refs ------
+
+def gqa_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                   valid: jax.Array, *,
+                   softmax_scale: Optional[float] = None) -> jax.Array:
+    """Single-token GQA attention over a (possibly ring) KV cache.
+
+    q: (b, 1, H, D); k_cache, v_cache: (b, S, K, D); valid: (b, S) bool.
+    Seed-verbatim ``models.attention.decode_attention``.
+    """
+    b, _, H, D = q.shape
+    _, S, K, _ = k_cache.shape
+    G = H // K
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    qr = q.reshape(b, K, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache).astype(jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, H, D)
+
+
+def mla_decode_ref(q_lat: jax.Array, q_rope: jax.Array, c_kv: jax.Array,
+                   k_rope: jax.Array, valid: jax.Array, *,
+                   denom: float) -> jax.Array:
+    """Matrix-absorbed MLA decode attention in latent space.
+
+    q_lat: (b, H, r_kv); q_rope: (b, H, dr); c_kv: (b, S, r_kv);
+    k_rope: (b, S, dr); valid: (b, S) bool; denom = sqrt(dn + dr).
+    Returns o_lat (b, H, r_kv).  Seed-verbatim ``mla_attend_decode`` body.
+    """
+    s_nope = jnp.einsum("bhr,bsr->bhs", q_lat, c_kv)
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope, k_rope)
+    scores = (s_nope + s_rope).astype(jnp.float32) / denom
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bsr->bhr", pr.astype(c_kv.dtype), c_kv)
+
+
+# ------------------------------------------- split-KV two-pass oracle -----
+
+def _combine_partials(acc, m, l):
+    """Second pass of the split-KV reduction: merge per-block partials
+    (acc unnormalised PV sums, m block row-maxes, l block exp-sums) over
+    the block axis (axis 1) with the running-max rescale."""
+    m_g = jnp.max(m, axis=1)                        # global row max
+    alpha = jnp.exp(m - jnp.expand_dims(m_g, 1))    # per-block rescale
+    l_g = jnp.sum(l * alpha, axis=1)
+    out = jnp.sum(acc * alpha[..., None], axis=1)
+    return out / jnp.maximum(l_g, 1e-30)[..., None]
+
+
+def gqa_decode_splitk(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                      valid: jax.Array, *, block_s: int,
+                      softmax_scale: Optional[float] = None) -> jax.Array:
+    """Pure-jnp split-KV flash decode: one (acc, m, l) partial per cache
+    block, then the two-pass combine.  Oracle for the Pallas kernel."""
+    b, _, H, D = q.shape
+    _, S, K, _ = k_cache.shape
+    G = H // K
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    qr = q.reshape(b, K, G, D)
+    accs, ms, ls = [], [], []
+    for s0 in range(0, S, block_s):
+        kb = k_cache[:, s0:s0 + block_s]
+        vb = v_cache[:, s0:s0 + block_s]
+        ok = valid[:, None, None, s0:s0 + block_s]
+        s = jnp.einsum("bkgd,bskd->bkgs", qr, kb).astype(jnp.float32) * scale
+        s = jnp.where(ok, s, NEG_INF)
+        m = jnp.max(s, axis=-1)                     # (b, K, G)
+        p = jnp.where(ok, jnp.exp(s - m[..., None]), 0.0)
+        ls.append(jnp.sum(p, axis=-1))
+        accs.append(jnp.einsum("bkgs,bskd->bkgd", p.astype(vb.dtype), vb
+                               ).astype(jnp.float32))
+        ms.append(m)
+    out = _combine_partials(jnp.stack(accs, 1), jnp.stack(ms, 1),
+                            jnp.stack(ls, 1))
+    return out.astype(v_cache.dtype).reshape(b, 1, H, D)
+
+
+def mla_decode_splitk(q_lat: jax.Array, q_rope: jax.Array, c_kv: jax.Array,
+                      k_rope: jax.Array, valid: jax.Array, *, denom: float,
+                      block_s: int) -> jax.Array:
+    """Split-KV two-pass MLA latent decode (jnp oracle)."""
+    accs, ms, ls = [], [], []
+    for s0 in range(0, c_kv.shape[1], block_s):
+        cb = c_kv[:, s0:s0 + block_s]
+        rb = k_rope[:, s0:s0 + block_s]
+        ok = valid[:, None, s0:s0 + block_s]
+        s = (jnp.einsum("bhr,bsr->bhs", q_lat, cb)
+             + jnp.einsum("bhd,bsd->bhs", q_rope, rb)
+             ).astype(jnp.float32) / denom
+        s = jnp.where(ok, s, NEG_INF)
+        m = jnp.max(s, axis=-1)                     # (b, H)
+        p = jnp.where(ok, jnp.exp(s - m[..., None]), 0.0)
+        ls.append(jnp.sum(p, axis=-1))
+        accs.append(jnp.einsum("bhs,bsr->bhr", p.astype(cb.dtype), cb
+                               ).astype(jnp.float32))
+        ms.append(m)
+    out = _combine_partials(jnp.stack(accs, 1), jnp.stack(ms, 1),
+                            jnp.stack(ls, 1))
+    return out.astype(c_kv.dtype)

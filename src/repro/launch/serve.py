@@ -10,7 +10,10 @@ decode throughput are reported separately — a single end-to-end figure
 with compilation inside the window mostly measures XLA, not the model.
 
 ``--continuous N`` drives ``serve.ContinuousBatcher`` instead: N requests
-through ``--batch`` cache slots with admissions between decode steps.  A
+through ``--batch`` cache slots with admissions between decode steps.
+Adding ``--disaggregated`` swaps in ``serve.DisaggregatedBatcher`` — the
+prefill front-end feeds the decode loop via cache-row handoffs (token
+outputs are identical; the prefill/handoff counters are printed).  A
 measured decode run can feed the calibration decode-bandwidth table via
 ``calibration.measured_decode_eff`` (printed for the local device).
 """
@@ -24,8 +27,8 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_arch, smoke_config
 from repro.models import init_params
-from repro.serve import (ContinuousBatcher, ServeRequest, prefill,
-                         serve_step)
+from repro.serve import (ContinuousBatcher, DisaggregatedBatcher,
+                         ServeRequest, prefill, serve_step)
 
 
 def _build_compiled(cfg, params, prompt, cache_len):
@@ -57,6 +60,9 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--continuous", type=int, default=0, metavar="N",
                     help="serve N requests through the continuous batcher")
+    ap.add_argument("--disaggregated", action="store_true",
+                    help="with --continuous: split prefill front-end from"
+                         " the decode loop (DisaggregatedBatcher)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
@@ -68,8 +74,9 @@ def main(argv=None):
         prompts = jax.random.randint(
             key, (args.continuous, args.prompt_len), 0, cfg.vocab_size,
             jnp.int32)
-        cb = ContinuousBatcher(cfg, params, slots=args.batch,
-                               cache_len=cache_len)
+        batcher_cls = (DisaggregatedBatcher if args.disaggregated
+                       else ContinuousBatcher)
+        cb = batcher_cls(cfg, params, slots=args.batch, cache_len=cache_len)
         cb.submit(ServeRequest(0, prompts[0], args.gen))
         cb.step()                           # warm-up: compile prefill+decode
         t0 = time.time()
@@ -78,9 +85,13 @@ def main(argv=None):
         out = cb.run()
         dt = time.time() - t0
         n_tok = sum(len(v) for v in out.values())
-        print(f"arch={cfg.name} continuous: {len(out)} requests,"
+        mode = "disaggregated" if args.disaggregated else "continuous"
+        print(f"arch={cfg.name} {mode}: {len(out)} requests,"
               f" {n_tok} tokens via {cb.decode_steps} steps x"
               f" {args.batch} slots in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+        if args.disaggregated:
+            print(f"prefill front-end: {cb.prefills} prefills,"
+                  f" {cb.handoffs} cache-row handoffs to the decode loop")
         print("sample:", out[0][:12])
         return out
 
@@ -120,6 +131,10 @@ def main(argv=None):
                 DEVICE_TYPES[dt_name])
             print(f"decode-bandwidth efficiency {eff:.3f} of {dt_name}"
                   f" peak (calibration.enable_decode table entry)")
+            pf_eff = calibration.measured_prefill_eff(
+                prefill_tok_s, cfg, 1, DEVICE_TYPES[dt_name])
+            print(f"prefill MFU {pf_eff:.3f} of {dt_name} peak"
+                  f" (prefill-pool rate model input)")
     except Exception:  # noqa: BLE001 — telemetry is best-effort
         pass
     print("sample:", toks[0, :12].tolist())

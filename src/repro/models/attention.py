@@ -291,7 +291,7 @@ def gqa_attend_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
         idx = jnp.arange(S)
         age = (slot[:, None] - idx[None, :]) % S
         valid = age <= jnp.minimum(posv[:, None], S - 1)
-        o = decode_attention(q, k_cache, v_cache, valid)
+        o = dispatch.flash_decode(q, k_cache, v_cache, valid)
         out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
         return out, {"k": k_cache, "v": v_cache}
     q = apply_rope(q, pos[None].astype(jnp.int32), cfg.rope_theta)
@@ -305,7 +305,8 @@ def gqa_attend_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
     idx = jnp.arange(S)
     age = (slot - idx) % S                            # 0 = newest
     valid = age <= jnp.minimum(pos, S - 1)
-    o = decode_attention(q, k_cache, v_cache, jnp.broadcast_to(valid, (b, S)))
+    o = dispatch.flash_decode(q, k_cache, v_cache,
+                              jnp.broadcast_to(valid, (b, S)))
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     return out, {"k": k_cache, "v": v_cache}
 
@@ -405,7 +406,6 @@ def mla_attend_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
         idx = jnp.arange(S)
         age = (slot[:, None] - idx[None, :]) % S
         valid = age <= jnp.minimum(posv[:, None], S - 1)   # (b, S)
-        valid_mask = valid[:, None, :]
     else:
         q_nope, q_rope = _mla_q(cfg, p, x, pos[None].astype(jnp.int32))
         c_new, kr_new = _mla_latent(cfg, p, x, pos[None].astype(jnp.int32))
@@ -416,16 +416,13 @@ def mla_attend_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
                                                      kr_new, slot, axis=1)
         idx = jnp.arange(S)
         age = (slot - idx) % S
-        valid = age <= jnp.minimum(pos, S - 1)
-        valid_mask = valid[None, None, :]
-    # absorb W^UK into q: q_lat (b,H,r_kv)
+        valid = jnp.broadcast_to(age <= jnp.minimum(pos, S - 1), (b, S))
+    # absorb W^UK into q: q_lat (b,H,r_kv); the masked latent softmax /
+    # PV runs through the dispatched split-KV decode op (ref on CPU/GPU
+    # is this block's seed math verbatim)
     q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], p["wk_b"])
-    s_nope = jnp.einsum("bhr,bsr->bhs", q_lat, c_kv)
-    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], k_rope)
-    scores = (s_nope + s_rope).astype(jnp.float32) / math.sqrt(dn + dr)
-    scores = jnp.where(valid_mask, scores, NEG_INF)
-    pr = jax.nn.softmax(scores, axis=-1)
-    o_lat = jnp.einsum("bhs,bsr->bhr", pr.astype(c_kv.dtype), c_kv)
+    o_lat = dispatch.mla_flash_decode(q_lat, q_rope[:, 0], c_kv, k_rope,
+                                      valid, denom=math.sqrt(dn + dr))
     o = jnp.einsum("bhr,rhd->bhd", o_lat, p["wv_b"])
     out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None, :]
     return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,3 +1,4 @@
 from repro.serve.engine import (  # noqa: F401
     prefill, serve_step, greedy_decode, ServeRequest, ContinuousBatcher,
+    DisaggregatedBatcher,
 )

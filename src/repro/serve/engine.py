@@ -6,10 +6,14 @@ dry-runs lower (one new token against a seq_len-deep cache).
 cache slots decodes in lock-step while finished requests free their slots
 and queued requests are prefilled into them *between* steps (per-row
 positions — the decode path accepts an (b,) position vector, so every
-slot advances independently).  Greedy outputs are bit-for-bit the tokens
-``greedy_decode`` produces for each request alone — slot reuse and
-co-batching change throughput, never results
-(``tests/test_serve_plane.py``)."""
+slot advances independently).  ``DisaggregatedBatcher`` splits that
+further: a prefill front-end turns pending requests into handoff packets
+(prefilled cache row + first token) and the decode loop only splices
+ready rows — the engine-level mirror of the prefill/decode replica pools
+in ``repro.core.lifecycle``.  Greedy outputs are bit-for-bit the tokens
+``greedy_decode`` produces for each request alone — slot reuse,
+co-batching, and the prefill/decode split change throughput, never
+results (``tests/test_serve_plane.py``)."""
 from __future__ import annotations
 
 from collections import deque
@@ -104,10 +108,40 @@ class ContinuousBatcher:
     # ------------------------------------------------------------ intake --
     def submit(self, request: ServeRequest) -> None:
         assert request.prompt.ndim == 1, "prompt must be a 1-D token vector"
-        assert (request.prompt.shape[0] + self.cfg.num_modal_tokens
-                + request.max_new_tokens) <= self.cache_len, \
-            "request cannot fit the cache"
+        if (request.prompt.shape[0] + self.cfg.num_modal_tokens
+                + request.max_new_tokens) > self.cache_len:
+            # reject up front: an oversized prompt must never reach a slot
+            # (a partial splice would corrupt the row for later tenants)
+            raise ValueError(
+                f"request {request.request_id} cannot fit the cache:"
+                f" {request.prompt.shape[0]} prompt"
+                f" + {self.cfg.num_modal_tokens} modal"
+                f" + {request.max_new_tokens} new > {self.cache_len}")
         self.pending.append(request)
+
+    def _prefill_one(self, req: ServeRequest) -> Tuple[int, Any]:
+        """Run one request's prompt; returns (first token, cache row)."""
+        batch = {"tokens": req.prompt[None]}
+        if self.cfg.num_modal_tokens:
+            batch["modal_embeds"] = jnp.zeros(
+                (1, self.cfg.num_modal_tokens, self.cfg.d_model),
+                jnp.bfloat16)
+        logits, row_cache = prefill(self.cfg, self.params, batch,
+                                    self.cache_len)
+        self.prefills += 1
+        return int(jnp.argmax(logits[0, -1, :])), row_cache
+
+    def _splice(self, slot: int, req: ServeRequest, tok: int,
+                row_cache: Any) -> None:
+        """Install a prefilled cache row + first token into ``slot``
+        (axis 1 is the batch axis of every (nb, b, ...) cache leaf)."""
+        self.cache = jax.tree.map(
+            lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), slot, axis=1),
+            self.cache, row_cache)
+        self.tokens = self.tokens.at[slot, 0].set(tok)
+        self.pos[slot] = req.prompt.shape[0] + self.cfg.num_modal_tokens
+        self.active[slot] = req
 
     def _admit(self) -> None:
         """Fill free slots from the pending queue (between decode steps)."""
@@ -115,37 +149,25 @@ class ContinuousBatcher:
             if self.active[slot] is not None or not self.pending:
                 continue
             req = self.pending.popleft()
-            batch = {"tokens": req.prompt[None]}
-            if self.cfg.num_modal_tokens:
-                batch["modal_embeds"] = jnp.zeros(
-                    (1, self.cfg.num_modal_tokens, self.cfg.d_model),
-                    jnp.bfloat16)
-            logits, row_cache = prefill(self.cfg, self.params, batch,
-                                        self.cache_len)
-            self.prefills += 1
-            tok = int(jnp.argmax(logits[0, -1, :]))
+            tok, row_cache = self._prefill_one(req)
             req.tokens.append(tok)
             if req.done:                     # budget of one: no decode steps
                 self.finished[req.request_id] = req
                 continue
-            # splice the prefilled cache into this slot's row (axis 1 is
-            # the batch axis of every (nb, b, ...) cache leaf)
-            self.cache = jax.tree.map(
-                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
-                    full, one.astype(full.dtype), slot, axis=1),
-                self.cache, row_cache)
-            self.tokens = self.tokens.at[slot, 0].set(tok)
-            self.pos[slot] = req.prompt.shape[0] + self.cfg.num_modal_tokens
-            self.active[slot] = req
+            self._splice(slot, req, tok, row_cache)
 
     # ------------------------------------------------------------- drive --
+    def _backlog(self) -> bool:
+        """Anything still waiting upstream of the decode slots?"""
+        return bool(self.pending)
+
     def step(self) -> bool:
         """Admit, then run one lock-step decode over all slots.  Returns
         False once no request is active or pending."""
         self._admit()
         live = [s for s in range(self.slots) if self.active[s] is not None]
         if not live:
-            return bool(self.pending)
+            return self._backlog()
         logits, self.cache = self._step(self.params, self.tokens, self.cache,
                                         jnp.asarray(self.pos, jnp.int32))
         self.decode_steps += 1
@@ -168,3 +190,70 @@ class ContinuousBatcher:
         while self.step():
             pass
         return {rid: req.tokens for rid, req in sorted(self.finished.items())}
+
+
+# -------------------------------------------------- disaggregated serving --
+
+class DisaggregatedBatcher(ContinuousBatcher):
+    """Prefill/decode-disaggregated continuous batching.
+
+    The unified ``ContinuousBatcher`` runs prompt prefills inline between
+    decode steps, so a long prompt stalls every co-batched request for a
+    full prefill forward.  Here the two phases are split the way the
+    cluster plane splits its replica pools: a **prefill front-end** drains
+    the pending queue into ``ready`` handoff packets (prefilled cache row
+    + first token — the engine-level analogue of the priced KV-cache
+    handoff in ``repro.ckpt.checkpoint.kv_handoff_seconds``), and the
+    decode loop only ever splices ready rows into free slots.  In a real
+    deployment the front-end runs on the prefill pool concurrently; here
+    it is driven from ``step`` for determinism, but the decode loop itself
+    never executes a prompt forward.
+
+    Token outputs are bit-for-bit identical to ``ContinuousBatcher`` (and
+    therefore to per-request ``greedy_decode``): prefill math does not
+    depend on *when* it runs, and per-row positions make results
+    independent of slot assignment (``tests/test_serve_plane.py``).
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int,
+                 cache_len: int, jit: bool = True):
+        super().__init__(cfg, params, slots=slots, cache_len=cache_len,
+                         jit=jit)
+        #: handoff packets: (request, first token, prefilled cache row)
+        self.ready: Deque[Tuple[ServeRequest, int, Any]] = deque()
+        self.handoffs = 0                    # rows transferred to decode
+
+    def prefill_step(self) -> bool:
+        """Front-end: prefill one pending request into a handoff packet.
+        Returns False when the pending queue is empty."""
+        if not self.pending:
+            return False
+        req = self.pending.popleft()
+        tok, row_cache = self._prefill_one(req)
+        req.tokens.append(tok)
+        if req.done:                         # budget of one: no decode steps
+            self.finished[req.request_id] = req
+            return True
+        self.ready.append((req, tok, row_cache))
+        return True
+
+    def _admit(self) -> None:
+        """Decode-side admission: splice *ready* rows only — never runs a
+        prompt forward (that is the front-end's job)."""
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.ready:
+                continue
+            req, tok, row_cache = self.ready.popleft()
+            self._splice(slot, req, tok, row_cache)
+            self.handoffs += 1
+
+    def _backlog(self) -> bool:
+        return bool(self.pending or self.ready)
+
+    def step(self) -> bool:
+        """Drive the front-end just far enough to cover the free slots,
+        then run one decode step over the ready-spliced batch."""
+        free = self.active.count(None)
+        while len(self.ready) < free and self.pending:
+            self.prefill_step()
+        return super().step()

@@ -1,0 +1,203 @@
+"""Split-KV flash decode: the seed-verbatim refs, the Pallas kernel, and
+the dispatch/autotune plumbing.
+
+Three layers:
+* golden — ``gqa_decode_ref`` / ``mla_decode_ref`` are bit-identical to
+  the seed decode expressions copied verbatim below, and the dispatch
+  wrappers resolve to exactly them on CPU, so routing
+  ``models/attention.py`` through ``kernels.dispatch`` changed nothing
+  off-TPU;
+* kernel — the Pallas split-KV kernel (interpret mode on CPU) and the
+  pure-jnp two-pass oracle agree with the refs within dtype tolerance
+  across GQA/MLA x bf16/f32 x cache lengths spanning multiple blocks;
+* plumbing — ``force()`` overrides apply, and the autotune cache keys on
+  the cache length (the new shape-bucket axis) and on the op kind.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import dispatch
+from repro.kernels.flash_decode import (flash_decode_gqa, flash_decode_mla,
+                                        ref as fd_ref)
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# seed-verbatim expressions (copied from the pre-dispatch decode paths)
+
+def _seed_gqa_decode(q, k_cache, v_cache, valid, softmax_scale=None):
+    """Verbatim pre-dispatch ``models.attention.decode_attention``."""
+    b, _, H, D = q.shape
+    _, S, K, _ = k_cache.shape
+    G = H // K
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    qr = q.reshape(b, K, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache).astype(jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, H, D)
+
+
+def _seed_mla_decode(q_lat, q_rope, c_kv, k_rope, valid, denom):
+    """Verbatim pre-dispatch ``mla_attend_decode`` latent-attention body."""
+    s_nope = jnp.einsum("bhr,bsr->bhs", q_lat, c_kv)
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope, k_rope)
+    scores = (s_nope + s_rope).astype(jnp.float32) / denom
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bsr->bhr", pr.astype(c_kv.dtype), c_kv)
+
+
+def _gqa_inputs(key, b, S, H, K, D, dtype, ring=False):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, 1, H, D), dtype)
+    k = jax.random.normal(ks[1], (b, S, K, D), dtype)
+    v = jax.random.normal(ks[2], (b, S, K, D), dtype)
+    if ring:  # per-row ring validity: row i sees a different prefix length
+        pos = jax.random.randint(ks[3], (b,), 1, 2 * S, jnp.int32)
+        idx = jnp.arange(S)
+        age = (pos[:, None] % S - idx[None, :]) % S
+        valid = age <= jnp.minimum(pos[:, None], S - 1)
+    else:
+        valid = jax.random.bernoulli(ks[3], 0.8, (b, S))
+        valid = valid.at[:, 0].set(True)     # never a fully-masked row
+    return q, k, v, valid
+
+
+def _mla_inputs(key, b, S, H, r, dr, dtype):
+    ks = jax.random.split(key, 5)
+    q_lat = jax.random.normal(ks[0], (b, H, r), dtype)
+    q_rope = jax.random.normal(ks[1], (b, H, dr), dtype)
+    c_kv = jax.random.normal(ks[2], (b, S, r), dtype)
+    k_rope = jax.random.normal(ks[3], (b, S, dr), dtype)
+    valid = jax.random.bernoulli(ks[4], 0.8, (b, S)).at[:, 0].set(True)
+    return q_lat, q_rope, c_kv, k_rope, valid
+
+
+# --------------------------------------------------------------------------
+# golden: refs == seed expressions, bit for bit
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("ring", [False, True])
+def test_gqa_ref_bit_identical_to_seed(dtype, ring):
+    q, k, v, valid = _gqa_inputs(jax.random.PRNGKey(0), 3, 96, 8, 2, 16,
+                                 dtype, ring=ring)
+    want = _seed_gqa_decode(q, k, v, valid)
+    got = fd_ref.gqa_decode_ref(q, k, v, valid)
+    assert got.dtype == want.dtype
+    assert (got == want).all()
+    # non-default softmax scale threads through identically
+    assert (fd_ref.gqa_decode_ref(q, k, v, valid, softmax_scale=0.37)
+            == _seed_gqa_decode(q, k, v, valid, 0.37)).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mla_ref_bit_identical_to_seed(dtype):
+    denom = math.sqrt(24 + 8)
+    args = _mla_inputs(jax.random.PRNGKey(1), 2, 80, 4, 12, 8, dtype)
+    want = _seed_mla_decode(*args, denom)
+    got = fd_ref.mla_decode_ref(*args, denom=denom)
+    assert got.dtype == want.dtype
+    assert (got == want).all()
+
+
+def test_dispatch_wrappers_are_refs_on_cpu():
+    """On CPU the dispatched op must BE the ref — the decode call sites in
+    models/attention.py resolve through these wrappers."""
+    assert dispatch.resolve("flash_decode", backend="cpu")[0] == "ref"
+    assert dispatch.resolve("flash_decode", backend="tpu")[0] == "pallas"
+    q, k, v, valid = _gqa_inputs(jax.random.PRNGKey(2), 2, 64, 4, 4, 8,
+                                 jnp.bfloat16)
+    assert (dispatch.flash_decode(q, k, v, valid)
+            == _seed_gqa_decode(q, k, v, valid)).all()
+    denom = math.sqrt(16 + 8)
+    margs = _mla_inputs(jax.random.PRNGKey(3), 2, 64, 4, 8, 8, jnp.bfloat16)
+    assert (dispatch.mla_flash_decode(*margs, denom=denom)
+            == _seed_mla_decode(*margs, denom)).all()
+
+
+# --------------------------------------------------------------------------
+# kernel: Pallas split-KV vs ref vs jnp oracle
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# cache lengths straddle the 128-token Pallas block: sub-block, unaligned
+# multi-block, and several-block cases all exercise the two-pass combine
+@pytest.mark.parametrize("S", [48, 128, 300, 640])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gqa_pallas_matches_ref(S, dtype):
+    q, k, v, valid = _gqa_inputs(jax.random.PRNGKey(4), 2, S, 8, 2, 16,
+                                 dtype, ring=True)
+    want = fd_ref.gqa_decode_ref(q, k, v, valid).astype(jnp.float32)
+    got = flash_decode_gqa(q, k, v, valid, block_s=128).astype(jnp.float32)
+    assert jnp.max(jnp.abs(got - want)) < _tol(dtype)
+    oracle = fd_ref.gqa_decode_splitk(q, k, v, valid, block_s=128)
+    assert jnp.max(jnp.abs(oracle.astype(jnp.float32) - want)) < _tol(dtype)
+
+
+@pytest.mark.parametrize("S", [48, 300, 640])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mla_pallas_matches_ref(S, dtype):
+    denom = math.sqrt(24 + 8)
+    args = _mla_inputs(jax.random.PRNGKey(5), 2, S, 4, 16, 8, dtype)
+    want = fd_ref.mla_decode_ref(*args, denom=denom).astype(jnp.float32)
+    got = flash_decode_mla(*args, denom=denom,
+                           block_s=128).astype(jnp.float32)
+    assert jnp.max(jnp.abs(got - want)) < _tol(dtype)
+    oracle = fd_ref.mla_decode_splitk(*args, denom=denom, block_s=128)
+    assert jnp.max(jnp.abs(oracle.astype(jnp.float32) - want)) < _tol(dtype)
+
+
+def test_fully_masked_rows_stay_finite():
+    """A cache block with no valid token must contribute nothing — the
+    masked-block guard, not NaNs from exp(-inf - -inf)."""
+    q, k, v, valid = _gqa_inputs(jax.random.PRNGKey(6), 2, 256, 4, 4, 8,
+                                 jnp.float32)
+    valid = valid.at[:, 128:].set(False)     # second block fully masked
+    got = flash_decode_gqa(q, k, v, valid, block_s=128)
+    assert bool(jnp.isfinite(got).all())
+    want = fd_ref.gqa_decode_ref(q, k, v, valid)
+    assert jnp.max(jnp.abs(got - want)) < _tol(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# plumbing: force overrides + autotune keying on cache length and kind
+
+def test_force_pallas_decode_path():
+    q, k, v, valid = _gqa_inputs(jax.random.PRNGKey(7), 2, 300, 8, 2, 16,
+                                 jnp.float32)
+    want = fd_ref.gqa_decode_ref(q, k, v, valid)
+    with dispatch.force("pallas"):
+        got = dispatch.flash_decode(q, k, v, valid)
+    assert jnp.max(jnp.abs(got - want)) < _tol(jnp.float32)
+    with dispatch.force("ref"):
+        assert (dispatch.flash_decode(q, k, v, valid) == want).all()
+
+
+def test_autotune_keys_on_cache_length_and_kind():
+    dispatch.clear_caches()
+    denom = math.sqrt(16 + 8)
+    with dispatch.force("pallas"):
+        for S in (128, 640):
+            q, k, v, valid = _gqa_inputs(jax.random.PRNGKey(8), 2, S, 4, 4,
+                                         8, jnp.float32)
+            dispatch.flash_decode(q, k, v, valid)
+        margs = _mla_inputs(jax.random.PRNGKey(9), 2, 128, 4, 8, 8,
+                            jnp.float32)
+        dispatch.mla_flash_decode(*margs, denom=denom)
+    info = dispatch.autotune_cache_info()
+    keys = [key for key in info if key[0] == "flash_decode"]
+    # two cache-length buckets for gqa + one mla entry = three keys
+    assert len(keys) == 3, keys
+    assert {key[1][-1] for key in keys} == {"gqa", "mla"}   # exact kind axis
+    assert len({key[1][1] for key in keys if key[1][-1] == "gqa"}) == 2
+    for key in keys:
+        assert info[key]["block_s"] in (128, 256, 512, 1024)
+    dispatch.clear_caches()

@@ -388,3 +388,233 @@ def test_memtrace_reset_allows_reseed():
     assert len(memtrace.samples()) == 0
     n = memtrace.seed_from_experiments()
     assert n > 0 and len(memtrace.samples()) == n
+
+
+# --------------------------------------------------------------------------
+# disaggregated serving: batcher split, prefill pool sizing, sim round trip
+
+def test_disaggregated_batcher_matches_unified_and_greedy(llama_smoke):
+    """The prefill-front-end/decode-loop split must not change a single
+    token: disaggregated == unified == per-request greedy, including
+    staggered submissions landing mid-flight."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import (ContinuousBatcher, DisaggregatedBatcher,
+                             ServeRequest)
+    cfg, params = llama_smoke
+    cache_len = 16
+    prompts = jax.random.randint(jax.random.PRNGKey(11), (5, 8), 0,
+                                 cfg.vocab_size, jnp.int32)
+    gens = [5, 1, 4, 2, 6]
+    want = {i: _decode_all(cfg, params, prompts[i:i + 1], gens[i],
+                           cache_len)[0] for i in range(5)}
+
+    def drive(cls):
+        b = cls(cfg, params, slots=2, cache_len=cache_len)
+        b.submit(ServeRequest(0, prompts[0], gens[0]))
+        b.step()                             # mid-flight submissions below
+        for i in range(1, 5):
+            b.submit(ServeRequest(i, prompts[i], gens[i]))
+        return b, b.run()
+
+    cb, unified = drive(ContinuousBatcher)
+    db, disagg = drive(DisaggregatedBatcher)
+    assert disagg == want and unified == want
+    assert db.prefills == 5
+    # every multi-token request crossed the prefill->decode handoff
+    assert db.handoffs == sum(1 for g in gens if g > 1)
+    # the front-end retires budget-one requests and keeps `ready` covering
+    # the free slots, so admission never wastes a decode round — the split
+    # needs no more lock-step decodes than the unified loop
+    assert db.decode_steps <= cb.decode_steps
+
+
+def test_batcher_slot_exhaustion_full_backlog(llama_smoke):
+    """More requests than slots, all submitted before the first step: the
+    pool must stay at <= slots active rows while the backlog drains."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import DisaggregatedBatcher, ServeRequest
+    cfg, params = llama_smoke
+    b = DisaggregatedBatcher(cfg, params, slots=2, cache_len=16)
+    prompts = jax.random.randint(jax.random.PRNGKey(12), (6, 8), 0,
+                                 cfg.vocab_size, jnp.int32)
+    for i in range(6):
+        b.submit(ServeRequest(i, prompts[i], 3))
+    seen_full = False
+    while b.step():
+        live = sum(a is not None for a in b.active)
+        assert live <= 2
+        seen_full = seen_full or live == 2
+    assert seen_full                          # the pool actually saturated
+    assert sorted(b.finished) == list(range(6))
+    assert all(len(r.tokens) == 3 for r in b.finished.values())
+
+
+def test_batcher_zero_admission_steps(llama_smoke):
+    """Steps with nothing to admit — empty pending mid-decode and a fully
+    drained batcher — must decode (or terminate) without corrupting
+    state."""
+    from repro.serve import ContinuousBatcher, DisaggregatedBatcher, \
+        ServeRequest
+    import jax
+    import jax.numpy as jnp
+    cfg, params = llama_smoke
+    prompt = jax.random.randint(jax.random.PRNGKey(13), (8,), 0,
+                                cfg.vocab_size, jnp.int32)
+    for cls in (ContinuousBatcher, DisaggregatedBatcher):
+        b = cls(cfg, params, slots=2, cache_len=16)
+        b.submit(ServeRequest(0, prompt, 4))
+        assert b.step()                      # admits + decodes
+        steps = b.decode_steps
+        assert b.step()                      # zero-admission decode step
+        assert b.decode_steps == steps + 1
+        b.run()
+        assert not b.step()                  # drained: no work, no decode
+        assert b.finished[0].tokens == [int(t) for t in b.finished[0].tokens]
+
+
+def test_batcher_rejects_oversized_prompt(llama_smoke):
+    """A prompt that cannot fit the cache is rejected at submit() — it
+    must never reach a slot, and later requests decode untouched."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import ContinuousBatcher, DisaggregatedBatcher, \
+        ServeRequest
+    cfg, params = llama_smoke
+    cache_len = 16
+    good = jax.random.randint(jax.random.PRNGKey(14), (8,), 0,
+                              cfg.vocab_size, jnp.int32)
+    big = jax.random.randint(jax.random.PRNGKey(15), (cache_len,), 0,
+                             cfg.vocab_size, jnp.int32)
+    want = _decode_all(cfg, params, good[None], 4, cache_len)[0]
+    for cls in (ContinuousBatcher, DisaggregatedBatcher):
+        b = cls(cfg, params, slots=2, cache_len=cache_len)
+        with pytest.raises(ValueError, match="cannot fit the cache"):
+            b.submit(ServeRequest(0, big, 4))
+        assert not b.pending and all(a is None for a in b.active)
+        b.submit(ServeRequest(1, good, 4))
+        assert b.run() == {1: want}
+
+
+def test_prefill_role_plans_and_decode_default_identity():
+    """role='decode' is the default and bit-identical to the role-less
+    call; role='prefill' ranks by the compute-bound prefill rate."""
+    from repro.core.marp import _prefill_rate
+    cfg = ARCHS["gpt2-350m"]
+    dts = ["A100-40G", "v5e"]
+    assert predict_serve_plans(cfg, 16, 2048, device_types=dts) == \
+        predict_serve_plans(cfg, 16, 2048, device_types=dts, role="decode")
+    pf = predict_serve_plans(cfg, 16, 2048, device_types=dts,
+                             role="prefill")
+    assert pf
+    for plan in pf[:4]:
+        rate = _prefill_rate(cfg, DEVICE_TYPES[plan.device_type], plan.d,
+                             plan.t)
+        assert plan.score == pytest.approx(rate / plan.n_devices ** 0.9)
+    with pytest.raises(AssertionError):
+        predict_serve_plans(cfg, 16, 2048, device_types=dts, role="mid")
+
+
+def test_prefill_pool_sizing_and_handoff_pricing():
+    from repro.ckpt.checkpoint import kv_handoff_seconds
+    from repro.core.marp import (default_ttft_slo, prefill_pool_target,
+                                 prefill_service_seconds)
+    cfg = ARCHS["gpt2-350m"]
+    plan = predict_serve_plans(cfg, 16, 2048, device_types=["A100-40G"],
+                               role="prefill")[0]
+    svc = prefill_service_seconds(cfg, plan, 1024.0)
+    handoff = kv_handoff_seconds(cfg, 1, 1024)
+    assert handoff > 0.0
+    assert svc > handoff                     # compute + the priced handoff
+    # handoff cost scales with the cache row being shipped
+    assert kv_handoff_seconds(cfg, 1, 2048) > handoff
+    slo = default_ttft_slo(cfg, plan, 1024.0)
+    assert slo > svc                         # headroom over one service
+    last = 0
+    for req_s in (0.0, 2.0, 32.0, 256.0, 2048.0):
+        n = prefill_pool_target(cfg, plan, req_s * 256.0, 1024.0, 256.0,
+                                slo)
+        assert n >= max(last, 1)
+        last = n
+    assert last > 1                          # the sweep actually scaled
+
+
+def test_disaggregated_trace_preserves_unified_arm():
+    """serve_workload(disaggregated=True) must derive request shape
+    without consuming rng draws: jobs and rate traces are bit-identical
+    across the two arms (only the disagg annotations differ)."""
+    from repro.cluster.traces import serve_workload
+    uni, uev = serve_workload(4, ["A100-40G", "v5e"], seed=3)
+    dis, dev = serve_workload(4, ["A100-40G", "v5e"], seed=3,
+                              disaggregated=True)
+    assert [(e.time, e.job_id, e.rate) for e in uev] == \
+        [(e.time, e.job_id, e.rate) for e in dev]
+    for u, d in zip(uni, dis):
+        assert (u.arrival, u.cfg.name, u.global_batch, u.seq_len,
+                u.request_rate, u.slo_p95_s) == \
+            (d.arrival, d.cfg.name, d.global_batch, d.seq_len,
+             d.request_rate, d.slo_p95_s)
+        assert tuple(u.plans) == tuple(d.plans)
+        assert not u.disaggregated and not u.prefill_plans
+        assert d.disaggregated and d.prefill_plans
+        assert d.avg_prompt_len == d.seq_len // 2
+        assert d.avg_new_tokens == d.seq_len // 4
+
+
+def test_disaggregated_lifecycle_round_trip_sim():
+    """A disaggregated serve job provisions and releases a prefill pool
+    alongside the decode pool; accounting charges both and TTFT gates
+    attainment."""
+    cfg = ARCHS["gpt2-350m"]
+    nodes = make_cluster([(6, 4, "A100-40G")])
+    job, base = _serve_job(cfg, nodes)
+    job.disaggregated = True
+    job.avg_prompt_len = 512.0
+    job.avg_new_tokens = 256.0
+    job.prefill_plans = predict_serve_plans_shared(
+        cfg, 16, 1024, device_types=("A100-40G",), max_devices=64,
+        role="prefill")
+    events = [RateEvent(time=600.0, job_id=0, rate=base * 6.0),
+              RateEvent(time=1800.0, job_id=0, rate=base * 0.5)]
+    res = simulate([job], nodes, FrenzyScheduler(), charge_overhead=False,
+                   rate_events=events)
+    assert job.state == "done"
+    assert job.slo_ttft_s > 0.0              # defaulted at serve start
+    assert job.prefill_plan in job.prefill_plans
+    assert job.prefill_service_s > 0.0
+    assert job.prefill_replicas == 0         # teardown released the pool
+    assert not job.prefill_placements
+    assert job.serve_replicas == 0
+    assert res.slo_attainment > 0.0
+    # both pools were charged: strictly more device-seconds than the
+    # identical unified job
+    uni, _ = _serve_job(cfg, make_cluster([(6, 4, "A100-40G")]))
+    res_u = simulate([uni], make_cluster([(6, 4, "A100-40G")]),
+                     FrenzyScheduler(), charge_overhead=False,
+                     rate_events=[RateEvent(time=600.0, job_id=0,
+                                            rate=base * 6.0),
+                                  RateEvent(time=1800.0, job_id=0,
+                                            rate=base * 0.5)])
+    assert res.serve_gpu_seconds > res_u.serve_gpu_seconds
+
+
+def test_sim_result_serve_telemetry():
+    """The new SimResult latency/throughput cells: populated and finite
+    for serve runs, NaN with no serve jobs."""
+    import math as _math
+    cfg = ARCHS["gpt2-350m"]
+    nodes = make_cluster([(4, 4, "A100-40G")])
+    job, base = _serve_job(cfg, nodes)
+    res = simulate([job], nodes, FrenzyScheduler(), charge_overhead=False,
+                   rate_events=[RateEvent(time=600.0, job_id=0,
+                                          rate=base * 2.0)])
+    assert res.serve_p95_latency > 0.0
+    assert _math.isfinite(res.serve_p95_latency)
+    assert res.serve_tokens > 0.0
+    assert res.serve_tok_per_device_s > 0.0
+    assert job.p95_obs_s == pytest.approx(job.slo_total_s)
+    empty = simulate([], nodes, FrenzyScheduler())
+    assert _math.isnan(empty.slo_attainment)
+    assert _math.isnan(empty.serve_p95_latency)
+    assert _math.isnan(empty.serve_tok_per_device_s)
