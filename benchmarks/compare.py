@@ -36,6 +36,17 @@ MIN_TIMING_US = 1000.0
 #: metric: "us" = us_per_call, "derived" = the derived column (numeric).
 KEY_RULES: Tuple[Tuple[Callable[[str], bool], str, str], ...] = (
     (lambda n: n.startswith("sched_overhead/frenzy/"), "us", "lower"),
+    # frontier-cell wall clock (100k-node / streamed-1M cells): whole-sim
+    # seconds in the derived column — must come before the generic
+    # sched_scale "us" rule (first match wins; the per-call us of those
+    # cells is sub-ms jitter, the wall seconds are the signal)
+    (lambda n: n.startswith("sched_scale/") and n.endswith("/wall_s"),
+     "derived", "lower"),
+    # per-event-kind sched_s_* telemetry rows are informational, not gated
+    (lambda n: n.startswith("sched_scale/") and "/sched_s_" in n,
+     "derived", "skip"),
+    (lambda n: n.startswith("sched_scale/") and n.endswith("/peak_live"),
+     "derived", "skip"),
     (lambda n: n.startswith("sched_scale/frenzy/"), "us", "lower"),
     (lambda n: n.startswith("kernels/") and n.endswith("_1k"),
      "us", "lower"),
@@ -78,6 +89,8 @@ def compare(base: dict, fresh: dict, threshold: float
         if key is None:
             continue
         metric, direction = key
+        if direction == "skip":
+            continue                        # telemetry row, never gated
         if name not in frows:
             notes.append(f"key row only in baseline (not failing): {name}")
             continue

@@ -6,6 +6,14 @@ small corner only).  Rows report the mean scheduler wall time per call (us)
 and simulated events processed per second of real time — the metric the
 indexed ClusterPool + incremental event loop are built for.
 
+The full run adds two frontier cells for the incremental sharded
+admission path (PR 7): a 100k-node x 50k-job mixed train/finetune/serve
+sim under node churn (``.../wall_s`` wall-clock row, gated lower-is-
+better, plus per-event-kind ``sched_s_*`` telemetry rows), and a
+10k-node x **1M-job** sim driven through the streaming trace/run path
+(``simulate_stream``: the job list is never materialized — the
+``peak_live`` row records how many jobs were ever live at once).
+
     PYTHONPATH=src python -m benchmarks.sched_scale [--quick]
 """
 from __future__ import annotations
@@ -14,14 +22,20 @@ import argparse
 import time
 
 from repro.cluster.schedulers import FrenzyScheduler
-from repro.cluster.simulator import simulate
-from repro.cluster.traces import scale_workload
+from repro.cluster.simulator import simulate, simulate_stream
+from repro.cluster.traces import (churn_schedule, mixed_scale_workload_iter,
+                                  scale_workload, serve_workload_iter)
 from repro.core.orchestrator import make_cluster
 
 FULL_GRID = [(100, 100), (100, 1_000), (100, 5_000),
              (1_000, 100), (1_000, 1_000), (1_000, 5_000),
              (10_000, 100), (10_000, 1_000), (10_000, 5_000)]
 QUICK_GRID = [(100, 100), (1_000, 1_000)]
+
+#: frontier cells (full mode only): 100k nodes x 50k jobs materialized,
+#: 10k nodes x 1M jobs streamed
+BIG_NODES, BIG_JOBS = 100_000, 50_000
+STREAM_NODES, STREAM_JOBS = 10_000, 1_000_000
 
 
 def make_scaled_cluster(n_nodes: int):
@@ -32,6 +46,57 @@ def make_scaled_cluster(n_nodes: int):
     c = n_nodes - a - b
     return make_cluster([(a, 8, "RTX2080Ti"), (b, 8, "A100-40G"),
                          (c, 4, "RTX6000")])
+
+
+def _big_cell():
+    """100k nodes x 50k jobs, all three traffic classes + node churn —
+    exercises every trigger of the per-event-kind scheduler telemetry."""
+    nodes = make_scaled_cluster(BIG_NODES)
+    types = sorted({n.device_type for n in nodes})
+    n_serve = 20
+    n_ft = BIG_JOBS // 5
+    n_train = BIG_JOBS - n_ft - n_serve
+    jobs = list(mixed_scale_workload_iter(n_train, n_ft, types, seed=17))
+    rate_events = []
+    for job, curve in serve_workload_iter(
+            n_serve, types, horizon=jobs[-1].arrival, seed=17,
+            start_id=n_train + n_ft):
+        jobs.append(job)
+        rate_events.extend(curve)
+    horizon = max(j.arrival for j in jobs)
+    churn = churn_schedule(nodes, horizon=horizon, churn_frac=0.001,
+                           seed=17)
+    t0 = time.perf_counter()
+    res = simulate(jobs, nodes, FrenzyScheduler(), charge_overhead=False,
+                   cluster_events=churn, rate_events=rate_events)
+    wall = time.perf_counter() - t0
+    prefix = f"sched_scale/frenzy/n{BIG_NODES}_j{BIG_JOBS}"
+    per_call_us = (res.sched_time_s / max(res.sched_calls, 1)) * 1e6
+    rows = [(f"{prefix}/wall_s", 0.0, round(wall, 2)),
+            (prefix, per_call_us, round(2 * BIG_JOBS / wall, 1))]
+    for kind in ("arrive", "finish", "churn", "scale"):
+        rows.append((f"{prefix}/sched_s_{kind}", 0.0,
+                     round(res.sched_time_by_kind.get(kind, 0.0), 4)))
+    return rows
+
+
+def _stream_cell():
+    """1M jobs through the streaming trace/run path: the trace generator
+    feeds the engine one job at a time and finished jobs are dropped, so
+    memory holds only live jobs (``peak_live`` row) — never the list."""
+    nodes = make_scaled_cluster(STREAM_NODES)
+    types = sorted({n.device_type for n in nodes})
+    n_ft = STREAM_JOBS // 5
+    t0 = time.perf_counter()
+    res = simulate_stream(
+        mixed_scale_workload_iter(STREAM_JOBS - n_ft, n_ft, types, seed=17),
+        nodes, FrenzyScheduler(), charge_overhead=False)
+    wall = time.perf_counter() - t0
+    prefix = f"sched_scale/frenzy/stream_n{STREAM_NODES}_j{STREAM_JOBS}"
+    per_call_us = (res.sched_time_s / max(res.sched_calls, 1)) * 1e6
+    return [(f"{prefix}/wall_s", 0.0, round(wall, 2)),
+            (prefix, per_call_us, round(2 * STREAM_JOBS / wall, 1)),
+            (f"{prefix}/peak_live", 0.0, res.peak_live_jobs)]
 
 
 def run(quick: bool = False):
@@ -47,6 +112,9 @@ def run(quick: bool = False):
         events_per_s = 2 * n_jobs / wall      # arrivals + finishes
         rows.append((f"sched_scale/frenzy/n{n_nodes}_j{n_jobs}",
                      per_call_us, round(events_per_s, 1)))
+    if not quick:
+        rows.extend(_big_cell())
+        rows.extend(_stream_cell())
     return rows
 
 

@@ -24,17 +24,33 @@ from typing import Any, Optional
 CKPT_BYTES_PER_PARAM = 12
 
 
-def state_bytes(cfg) -> int:
+def lora_state_bytes(cfg, rank: int) -> int:
+    """Serialized adapter-state size of a LoRA finetune: the A+B factor
+    pair on each of the four attention projections (``2 * d_model * rank``
+    params per factor pair, 4 pairs per layer), with the same fp32
+    params + both-Adam-moments widening as full checkpoints.  The frozen
+    base model is never part of the checkpoint — re-materialized from the
+    pretrained weights at restore — which is what makes finetune jobs
+    near-free to preempt and migrate."""
+    per_layer = 4 * 2 * cfg.d_model * rank
+    return int(per_layer) * cfg.num_layers * CKPT_BYTES_PER_PARAM
+
+
+def state_bytes(cfg, lora_rank: int = 0) -> int:
     """Serialized training-state size (params + optimizer moments) of a
-    model config — what one checkpoint save/restore actually moves."""
+    model config — what one checkpoint save/restore actually moves.
+    ``lora_rank > 0`` prices a LoRA finetune (adapters only)."""
+    if lora_rank > 0:
+        return lora_state_bytes(cfg, lora_rank)
     from repro.core.memory_model import analytic_param_count
     return int(analytic_param_count(cfg)) * CKPT_BYTES_PER_PARAM
 
 
-def migration_seconds(cfg, bandwidth: float = 16 * 2 ** 30) -> float:
+def migration_seconds(cfg, bandwidth: float = 16 * 2 ** 30,
+                      lora_rank: int = 0) -> float:
     """Checkpoint-restore migration cost: save the state at the old
     placement plus restore it at the new one, at ``bandwidth`` bytes/s."""
-    return 2.0 * state_bytes(cfg) / float(bandwidth)
+    return 2.0 * state_bytes(cfg, lora_rank=lora_rank) / float(bandwidth)
 
 
 def kv_handoff_bytes(cfg, batch: int, cache_len: int) -> float:

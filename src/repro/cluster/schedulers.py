@@ -13,6 +13,11 @@ exactly like the seed ``_clone_nodes`` protocol.
 Queue order is ``lifecycle.fifo_order`` for every scheduler here: FIFO by
 (arrival, id), except jobs preempted by node departures go first, least
 remaining work ahead — churn must not starve nearly-finished work.
+``queued`` may be a plain list or the engine's persistent
+``AdmissionQueue``; ``fifo_order`` handles both (the queue yields its
+k-way shard merge instead of re-sorting), and ``FrenzyScheduler``
+additionally takes the sharded-pass fast path when given the queue plus
+the shared pool — bit-identical decisions either way.
 """
 from __future__ import annotations
 

@@ -27,8 +27,8 @@ change outcomes: admission always needs at least one job's cheapest plan.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Sequence, Tuple
 
 from repro.core import calibration
 from repro.core.devices import DEVICE_TYPES
@@ -60,6 +60,11 @@ class SimResult:
     oom_log: Sequence[Tuple[float, int, str, float, float]] = ()
     scale_ups: int = 0                      # serve replicas provisioned
     scale_downs: int = 0                    # serve replicas released
+    #: scheduler wall time split by triggering event kind
+    #: (arrive/finish/churn/oom/scale/...) — where the control plane
+    #: actually spent its time (benchmarks/sched_scale telemetry)
+    sched_time_by_kind: Dict[str, float] = field(default_factory=dict)
+    peak_live_jobs: int = 0                 # max concurrently-live jobs
 
     @property
     def finished(self) -> List[Job]:
@@ -216,4 +221,115 @@ def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
                      oom_failures=engine.oom_failures,
                      oom_log=tuple(engine.oom_log),
                      scale_ups=engine.scale_up_count,
-                     scale_downs=engine.scale_down_count)
+                     scale_downs=engine.scale_down_count,
+                     sched_time_by_kind=dict(engine.sched_time_by_kind),
+                     peak_live_jobs=engine.peak_live_jobs)
+
+
+@dataclass
+class StreamResult:
+    """Aggregate accounting of a streamed simulation (``simulate_stream``).
+
+    Job objects are dropped as they finish, so per-job lists are replaced
+    by running sums — everything else mirrors ``SimResult``."""
+    n_jobs: int                             # jobs pulled from the stream
+    n_finished: int
+    n_failed: int
+    sum_jct: float
+    sum_queue_time: float
+    max_jct: float
+    sched_time_s: float
+    sched_calls: int
+    makespan: float
+    peak_live_jobs: int
+    sched_time_by_kind: Dict[str, float] = field(default_factory=dict)
+    preemptions: int = 0
+    migrations: int = 0
+    ooms: int = 0
+    oom_failures: int = 0
+    scale_ups: int = 0
+    scale_downs: int = 0
+
+    @property
+    def avg_jct(self) -> float:
+        return self.sum_jct / self.n_finished if self.n_finished \
+            else float("nan")
+
+    @property
+    def avg_queue_time(self) -> float:
+        return self.sum_queue_time / self.n_finished if self.n_finished \
+            else float("nan")
+
+    @property
+    def unfinished(self) -> int:
+        return self.n_jobs - self.n_finished - self.n_failed
+
+
+def simulate_stream(jobs: Iterable[Job], nodes: Sequence[Node],
+                    scheduler: Scheduler, charge_overhead: bool = True, *,
+                    cluster_events: Iterable[ClusterEvent] = (),
+                    rate_events: Iterable[RateEvent] = (),
+                    elastic: bool = False,
+                    migration_bandwidth: float =
+                    DEFAULT_MIGRATION_BANDWIDTH,
+                    oom_check_fn: OomCheckFn = None,
+                    replan_fn: ReplanFn = None,
+                    max_oom_retries: int = 8,
+                    scale_up_delay: float = DEFAULT_SCALE_UP_DELAY
+                    ) -> StreamResult:
+    """Drive the lifecycle engine over *streamed* traces: ``jobs`` (and
+    the event traces) may be generators (``traces.scale_workload_iter``
+    etc.), and finished jobs are dropped from the engine's live map
+    (``retain_jobs=False``) — a 1M-job sim holds only live jobs plus the
+    queue, never the full trace.  Statistics accumulate in a
+    ``StreamResult`` as jobs complete."""
+    acc = {"n": 0, "fin": 0, "fail": 0, "jct": 0.0, "queue": 0.0,
+           "max_jct": 0.0}
+
+    def on_complete(job: Job) -> None:
+        if job.state == "done":
+            acc["fin"] += 1
+            acc["jct"] += job.jct
+            acc["queue"] += job.queue_time
+            acc["max_jct"] = max(acc["max_jct"], job.jct)
+        else:
+            acc["fail"] += 1
+
+    def counted(src: Iterable[Job]):
+        for job in src:
+            acc["n"] += 1
+            yield job
+
+    engine = LifecycleEngine(nodes, scheduler,
+                             charge_overhead=charge_overhead,
+                             elastic=elastic,
+                             migration_bandwidth=migration_bandwidth,
+                             oom_check_fn=oom_check_fn,
+                             replan_fn=replan_fn,
+                             max_oom_retries=max_oom_retries,
+                             scale_up_delay=scale_up_delay,
+                             retain_jobs=False,
+                             on_complete=on_complete,
+                             reset=True)
+    pool_nodes = engine.pool.nodes
+    engine.rate_fn = lambda job, placements, d, t: \
+        job_rate(job, placements, pool_nodes, d, t)
+    # the generator wrapper also forces the engine's streaming run path
+    # (an all-list input would take the materialized fast path); list
+    # cluster/rate traces are still accepted — the engine sorts those
+    engine.run(counted(iter(jobs)), cluster_events, rate_events)
+    return StreamResult(n_jobs=acc["n"], n_finished=acc["fin"],
+                        n_failed=acc["fail"], sum_jct=acc["jct"],
+                        sum_queue_time=acc["queue"],
+                        max_jct=acc["max_jct"],
+                        sched_time_s=engine.sched_time_s,
+                        sched_calls=engine.sched_calls,
+                        makespan=engine.makespan,
+                        peak_live_jobs=engine.peak_live_jobs,
+                        sched_time_by_kind=dict(engine.sched_time_by_kind),
+                        preemptions=engine.preemption_count,
+                        migrations=engine.migration_count,
+                        ooms=engine.oom_count,
+                        oom_failures=engine.oom_failures,
+                        scale_ups=engine.scale_up_count,
+                        scale_downs=engine.scale_down_count)

@@ -17,10 +17,12 @@ per-job-class true-peak multiplier that feeds the lifecycle engine's
 """
 from __future__ import annotations
 
+import heapq
 import math
 import random
 from dataclasses import replace
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
 
 from repro.configs.base import ModelConfig
 from repro.core.lifecycle import (ClusterEvent, RateEvent, NODE_JOIN,
@@ -75,29 +77,62 @@ def _mk_job(rng: random.Random, job_id: int, arrival: float,
                   requested_n=req)
 
 
-def new_workload(n_jobs: int, device_types: Sequence[str],
-                 seed: int = 0, mean_interarrival: float = 120.0
-                 ) -> List[SimJob]:
-    """The paper's NewWorkload: GPT-2 + BERT queues (30/60 tasks)."""
+def new_workload_iter(n_jobs: int, device_types: Sequence[str],
+                      seed: int = 0, mean_interarrival: float = 120.0
+                      ) -> Iterator[SimJob]:
+    """Streaming form of ``new_workload`` — same rng, same jobs, one at a
+    time (the engine's streaming run path holds only live jobs)."""
     rng = random.Random(seed)
     pool = list(GPT2_SIZES.values()) + list(BERT_SIZES.values())
-    jobs: List[SimJob] = []
-    t = 0.0
-    jid = 0
-    while len(jobs) < n_jobs:
+    t, jid = 0.0, 0
+    while jid < n_jobs:
         t += rng.expovariate(1.0 / mean_interarrival)
         cfg = rng.choice(pool)
         batch = rng.choice([8, 16, 32, 64])
         seq = rng.choice([512, 1024, 2048])
         minutes = rng.lognormvariate(math.log(30), 0.8)     # ~30 min median
-        job = _mk_job(rng, jid, t, cfg, batch, seq, samples=1, device_types=device_types)
+        job = _mk_job(rng, jid, t, cfg, batch, seq, samples=1,
+                      device_types=device_types)
         if job is None:
             continue
         # convert target duration to samples using a nominal 1-device rate
-        job.total_samples = max(int(minutes * 60 * 2), 1)   # ~2 samples/s nominal
-        jobs.append(job)
+        job.total_samples = max(int(minutes * 60 * 2), 1)   # ~2 samples/s
+        yield job
         jid += 1
-    return jobs
+
+
+def new_workload(n_jobs: int, device_types: Sequence[str],
+                 seed: int = 0, mean_interarrival: float = 120.0
+                 ) -> List[SimJob]:
+    """The paper's NewWorkload: GPT-2 + BERT queues (30/60 tasks)."""
+    return list(new_workload_iter(n_jobs, device_types, seed,
+                                  mean_interarrival))
+
+
+def scale_workload_iter(n_jobs: int, device_types: Sequence[str],
+                        seed: int = 0, mean_interarrival: float = 1.0,
+                        mean_minutes: float = 10.0,
+                        start_id: int = 0) -> Iterator[SimJob]:
+    """Streaming form of ``scale_workload`` (identical rng draw order, so
+    ``list(scale_workload_iter(...))`` with ``start_id=0`` is bit-identical
+    to the list builder).  ``start_id`` offsets job ids so several traffic
+    classes can merge into one trace without collisions."""
+    rng = random.Random(300 + seed)
+    pool = list(GPT2_SIZES.values()) + list(BERT_SIZES.values())
+    t, made = 0.0, 0
+    while made < n_jobs:
+        t += rng.expovariate(1.0 / mean_interarrival)
+        cfg = rng.choice(pool)
+        batch = rng.choice([8, 16, 32, 64])
+        seq = rng.choice([512, 1024, 2048])
+        job = _mk_job(rng, start_id + made, t, cfg, batch, seq, 1,
+                      device_types)
+        if job is None:
+            continue
+        minutes = rng.lognormvariate(math.log(mean_minutes), 0.8)
+        job.total_samples = max(int(minutes * 60 * 2), 1)
+        yield job
+        made += 1
 
 
 def scale_workload(n_jobs: int, device_types: Sequence[str], seed: int = 0,
@@ -109,23 +144,67 @@ def scale_workload(n_jobs: int, device_types: Sequence[str], seed: int = 0,
     Draws from a small (cfg, batch, seq) key set — as production trace
     replays do — so MARP's plan cache and the schedulers' shared-plan-list
     dedupe engage."""
-    rng = random.Random(300 + seed)
-    pool = list(GPT2_SIZES.values()) + list(BERT_SIZES.values())
-    jobs: List[SimJob] = []
-    t, jid = 0.0, 0
-    while len(jobs) < n_jobs:
+    return list(scale_workload_iter(n_jobs, device_types, seed,
+                                    mean_interarrival, mean_minutes))
+
+
+#: finetune model pool: mid-sized GPT-2s (LoRA on the small end is not
+#: worth a cluster job; the large end finetunes full-parameter).
+FINETUNE_SIZES = ("gpt2-350m", "gpt2-774m", "gpt2-1.5b")
+
+
+def finetune_workload_iter(n_jobs: int, device_types: Sequence[str],
+                           seed: int = 0, mean_interarrival: float = 2.0,
+                           mean_minutes: float = 5.0,
+                           start_id: int = 0) -> Iterator[SimJob]:
+    """LoRA finetune traffic (``kind="finetune"``): short, latency-tolerant
+    jobs whose training state is adapters-only (``ckpt.lora_state_bytes``)
+    — near-free checkpoints make them ideal preemption/backfill fodder for
+    the admission shards.  Placement still prices the *full* base model
+    (frozen weights + activations live on-device); only the checkpoint
+    and migration traffic shrinks."""
+    rng = random.Random(800 + seed)
+    t, made = 0.0, 0
+    while made < n_jobs:
         t += rng.expovariate(1.0 / mean_interarrival)
-        cfg = rng.choice(pool)
-        batch = rng.choice([8, 16, 32, 64])
-        seq = rng.choice([512, 1024, 2048])
-        job = _mk_job(rng, jid, t, cfg, batch, seq, 1, device_types)
+        cfg = GPT2_SIZES[rng.choice(FINETUNE_SIZES)]
+        batch = rng.choice([4, 8, 16])
+        seq = rng.choice([512, 1024])
+        rank = rng.choice([8, 16, 32])
+        job = _mk_job(rng, start_id + made, t, cfg, batch, seq, 1,
+                      device_types)
         if job is None:
             continue
         minutes = rng.lognormvariate(math.log(mean_minutes), 0.8)
         job.total_samples = max(int(minutes * 60 * 2), 1)
-        jobs.append(job)
-        jid += 1
-    return jobs
+        job.kind = "finetune"
+        job.lora_rank = rank
+        yield job
+        made += 1
+
+
+def finetune_workload(n_jobs: int, device_types: Sequence[str],
+                      seed: int = 0, mean_interarrival: float = 2.0,
+                      mean_minutes: float = 5.0,
+                      start_id: int = 0) -> List[SimJob]:
+    return list(finetune_workload_iter(n_jobs, device_types, seed,
+                                       mean_interarrival, mean_minutes,
+                                       start_id))
+
+
+def mixed_scale_workload_iter(n_train: int, n_finetune: int,
+                              device_types: Sequence[str], seed: int = 0,
+                              mean_interarrival: float = 1.0,
+                              mean_minutes: float = 10.0
+                              ) -> Iterator[SimJob]:
+    """Train + LoRA-finetune traffic classes merged by arrival time — the
+    scale benchmark's mixed stream.  Lazy: pulls one job per class ahead,
+    so a 1M-job merge holds O(1) jobs."""
+    train = scale_workload_iter(n_train, device_types, seed,
+                                mean_interarrival, mean_minutes)
+    ft = finetune_workload_iter(n_finetune, device_types, seed,
+                                start_id=n_train)
+    return heapq.merge(train, ft, key=lambda j: j.arrival)
 
 
 def churn_schedule(nodes: Sequence, *, horizon: float,
@@ -152,6 +231,19 @@ def churn_schedule(nodes: Sequence, *, horizon: float,
                                    node_id=node.node_id))
     events.sort(key=lambda e: (e.time, e.kind, e.node_id))
     return events
+
+
+def churn_schedule_iter(nodes: Sequence, *, horizon: float,
+                        churn_frac: float = 0.05, seed: int = 0,
+                        mean_downtime: Optional[float] = None
+                        ) -> Iterator[ClusterEvent]:
+    """Streaming form of ``churn_schedule`` for the engine's iterator run
+    path.  Churn is fleet-bounded (2 events per churned node), so the
+    sorted list is materialized internally and yielded — memory scales
+    with the fleet, never with the job count."""
+    yield from churn_schedule(nodes, horizon=horizon,
+                              churn_frac=churn_frac, seed=seed,
+                              mean_downtime=mean_downtime)
 
 
 def spot_schedule(nodes: Sequence, *, horizon: float, n_waves: int = 3,
@@ -242,7 +334,8 @@ SERVE_SIZES = ("gpt2-124m", "gpt2-350m", "gpt2-774m")
 def serve_workload(n_jobs: int, device_types: Sequence[str], *,
                    horizon: float = 4 * 3600.0, seed: int = 0,
                    trace: str = "bursty", peak_mult: float = 6.0,
-                   static: bool = False, disaggregated: bool = False
+                   static: bool = False, disaggregated: bool = False,
+                   start_id: int = 0
                    ) -> Tuple[List[SimJob], List[RateEvent]]:
     """Serve jobs + their request-rate traces for the co-scheduling sim.
 
@@ -261,12 +354,35 @@ def serve_workload(n_jobs: int, device_types: Sequence[str], *,
     from the cache length *without consuming rng draws*, and the prefill
     pool gets its own ``role="prefill"`` plan ranking — so the unified
     and disaggregated arms see bit-identical jobs and rate traces."""
-    rng = random.Random(700 + seed)
     jobs: List[SimJob] = []
     rate_events: List[RateEvent] = []
+    for job, curve_events in serve_workload_iter(
+            n_jobs, device_types, horizon=horizon, seed=seed, trace=trace,
+            peak_mult=peak_mult, static=static,
+            disaggregated=disaggregated, start_id=start_id):
+        jobs.append(job)
+        rate_events.extend(curve_events)
+    return jobs, rate_events
+
+
+def serve_workload_iter(n_jobs: int, device_types: Sequence[str], *,
+                        horizon: float = 4 * 3600.0, seed: int = 0,
+                        trace: str = "bursty", peak_mult: float = 6.0,
+                        static: bool = False, disaggregated: bool = False,
+                        start_id: int = 0
+                        ) -> Iterator[Tuple[SimJob, List[RateEvent]]]:
+    """Streaming form of ``serve_workload``: yields ``(job, rate_events)``
+    pairs one job at a time, identical rng draw order.  A job's rate
+    events span its whole serving horizon, so a globally time-sorted rate
+    stream cannot be produced lazily — callers either collect the events
+    (list mode sorts them) or keep the serve population small in streamed
+    sims (rate memory is O(serve jobs), never O(total jobs)).
+    ``start_id`` renumbers job/rate-event ids (rng draws unchanged) so
+    serve traffic can join a merged multi-class trace."""
+    rng = random.Random(700 + seed)
     jid = 0
     t = 0.0
-    while len(jobs) < n_jobs:
+    while jid < n_jobs:
         t += rng.expovariate(1.0 / max(horizon * 0.002, 1.0))
         cfg = GPT2_SIZES[rng.choice(SERVE_SIZES)]
         batch = rng.choice([8, 16, 32])
@@ -289,8 +405,8 @@ def serve_workload(n_jobs: int, device_types: Sequence[str], *,
         else:
             curve = bursty_rate_trace(horizon=horizon - t, base_rate=base,
                                       burst_rate=peak, seed=seed * 1000 + jid)
-        job = SimJob(job_id=jid, arrival=t, cfg=cfg, global_batch=batch,
-                     seq_len=cache_len,
+        job = SimJob(job_id=start_id + jid, arrival=t, cfg=cfg,
+                     global_batch=batch, seq_len=cache_len,
                      total_samples=max(int(horizon - t), 1),
                      plans=plans, kind="serve", request_rate=curve[0][1],
                      slo_p95_s=slo)
@@ -306,12 +422,10 @@ def serve_workload(n_jobs: int, device_types: Sequence[str], *,
             job.static_replicas = replicas_for_slo(
                 replica_rate, step_s, peak, slo,
                 max_replicas=job.max_replicas)
-        jobs.append(job)
-        for off, rate in curve[1:]:
-            rate_events.append(RateEvent(time=t + off, job_id=jid,
-                                         rate=rate))
+        yield job, [RateEvent(time=t + off, job_id=start_id + jid,
+                              rate=rate)
+                    for off, rate in curve[1:]]
         jid += 1
-    return jobs, rate_events
 
 
 def misprediction_oracle(*, severity: float = 0.5, frac: float = 0.2,
@@ -358,16 +472,15 @@ def misprediction_oracle(*, severity: float = 0.5, frac: float = 0.2,
     return check
 
 
-def philly_like(n_jobs: int, device_types: Sequence[str], seed: int = 0
-                ) -> List[SimJob]:
-    """Philly [ATC'19]: mostly small (1-4 GPU) short jobs, heavy tail."""
+def philly_like_iter(n_jobs: int, device_types: Sequence[str],
+                     seed: int = 0) -> Iterator[SimJob]:
+    """Streaming form of ``philly_like`` (identical rng draw order)."""
     rng = random.Random(100 + seed)
     pool = [GPT2_SIZES["gpt2-124m"], GPT2_SIZES["gpt2-350m"],
             GPT2_SIZES["gpt2-774m"], BERT_SIZES["bert-base"],
             BERT_SIZES["bert-large"]]
-    jobs = []
     t, jid = 0.0, 0
-    while len(jobs) < n_jobs:
+    while jid < n_jobs:
         t += rng.expovariate(1.0 / 60.0)
         cfg = rng.choice(pool)
         batch = rng.choice([4, 8, 16, 32])
@@ -377,20 +490,24 @@ def philly_like(n_jobs: int, device_types: Sequence[str], seed: int = 0
             continue
         minutes = rng.lognormvariate(math.log(15), 1.2)
         job.total_samples = max(int(minutes * 60 * 4), 1)
-        jobs.append(job)
+        yield job
         jid += 1
-    return jobs
 
 
-def helios_like(n_jobs: int, device_types: Sequence[str], seed: int = 0
+def philly_like(n_jobs: int, device_types: Sequence[str], seed: int = 0
                 ) -> List[SimJob]:
-    """Helios [SC'21]: larger GPU demands, longer runtimes than Philly."""
+    """Philly [ATC'19]: mostly small (1-4 GPU) short jobs, heavy tail."""
+    return list(philly_like_iter(n_jobs, device_types, seed))
+
+
+def helios_like_iter(n_jobs: int, device_types: Sequence[str],
+                     seed: int = 0) -> Iterator[SimJob]:
+    """Streaming form of ``helios_like`` (identical rng draw order)."""
     rng = random.Random(200 + seed)
     pool = [GPT2_SIZES["gpt2-774m"], GPT2_SIZES["gpt2-1.5b"],
             GPT2_SIZES["gpt2-2.7b"], GPT2_SIZES["gpt2-7b"]]
-    jobs = []
     t, jid = 0.0, 0
-    while len(jobs) < n_jobs:
+    while jid < n_jobs:
         t += rng.expovariate(1.0 / 300.0)
         cfg = rng.choice(pool)
         batch = rng.choice([16, 32, 64, 128])
@@ -400,6 +517,11 @@ def helios_like(n_jobs: int, device_types: Sequence[str], seed: int = 0
             continue
         hours = rng.lognormvariate(math.log(2.0), 1.0)
         job.total_samples = max(int(hours * 3600 * 1.0), 1)
-        jobs.append(job)
+        yield job
         jid += 1
-    return jobs
+
+
+def helios_like(n_jobs: int, device_types: Sequence[str], seed: int = 0
+                ) -> List[SimJob]:
+    """Helios [SC'21]: larger GPU demands, longer runtimes than Philly."""
+    return list(helios_like_iter(n_jobs, device_types, seed))

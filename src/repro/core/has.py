@@ -94,6 +94,11 @@ class ClusterPool:
         self._buckets: Dict[Tuple[str, int], _Bucket] = {}
         self._by_type: Dict[str, List[_Bucket]] = {}   # mem-ascending
         self.total_idle = 0
+        #: idle devices per device type — the admission shards' O(1)
+        #: eligibility counters (ignores per-class memory: an upper bound
+        #: on any plan's satisfiable count, exact for single-mem-class
+        #: types, which is every catalog type today)
+        self.idle_by_type: Dict[str, int] = {}
         for n in nodes:
             if reset:
                 n.idle = n.total
@@ -117,6 +122,8 @@ class ClusterPool:
         if n.idle > 0:
             insort(bucket.entries, (-n.idle, pos, n.node_id))
         self.total_idle += n.idle
+        self.idle_by_type[n.device_type] = \
+            self.idle_by_type.get(n.device_type, 0) + n.idle
 
     # --------------------------------------------------------- mutations --
     def _reindex(self, bucket: _Bucket, n: Node, pos: int, old_idle: int) -> None:
@@ -134,6 +141,7 @@ class ClusterPool:
         bucket = self._buckets[(n.device_type, n.mem)]
         bucket.idle_sum -= k
         self.total_idle -= k
+        self.idle_by_type[n.device_type] -= k
         self._reindex(bucket, n, self._pos[node_id], old)
 
     def free(self, node_id: str, k: int) -> None:
@@ -143,6 +151,7 @@ class ClusterPool:
         bucket = self._buckets[(n.device_type, n.mem)]
         bucket.idle_sum += k
         self.total_idle += k
+        self.idle_by_type[n.device_type] += k
         self._reindex(bucket, n, self._pos[node_id], old)
 
     def apply(self, placements: Sequence[Tuple[str, int]]) -> None:
@@ -172,6 +181,7 @@ class ClusterPool:
         bucket = self._buckets[(n.device_type, n.mem)]
         bucket.idle_sum -= n.idle
         self.total_idle -= n.idle
+        self.idle_by_type[n.device_type] -= n.idle
         if n.idle > 0:
             i = bisect_left(bucket.entries, (-n.idle, pos))
             assert i < len(bucket.entries) and bucket.entries[i][1] == pos

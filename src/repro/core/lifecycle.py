@@ -74,10 +74,15 @@ runs never touch it.
 from __future__ import annotations
 
 import heapq
+import os
 import time
+from bisect import bisect_left, insort
+from collections import deque
+from collections.abc import Sequence as _SequenceABC
 from dataclasses import dataclass, field
-from typing import (Callable, Dict, Iterable, List, Optional, Sequence, Set,
-                    Tuple, Union)
+from itertools import chain
+from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Set, Tuple, Union)
 
 from repro.core import memtrace
 from repro.core.has import Allocation, ClusterPool, Node
@@ -138,8 +143,14 @@ class Job:
     preemptions: int = 0
     migrations: int = 0
     ooms: int = 0                           # OOM kills of this job
+    # fine-tune state (kind == "finetune"): LoRA adapters train a tiny
+    # parameter set, so the serialized training state — and with it every
+    # checkpoint, preemption restart, and migration — is near-free
+    # (``ckpt.checkpoint.lora_state_bytes``).  Placement/memory still use
+    # the base model's plans: the frozen weights and activations dominate.
+    lora_rank: int = 0                      # 0: full training state
     # serving state (kind == "serve"; dormant defaults otherwise)
-    kind: str = "train"                     # train | serve
+    kind: str = "train"                     # train | finetune | serve
     request_rate: float = 0.0               # offered decode tokens/s
     slo_p95_s: float = 0.0                  # p95 token-latency target
     autoscale: bool = True                  # False: pin static_replicas
@@ -172,6 +183,10 @@ class Job:
     prefill_placements: List[Tuple[Tuple[str, int], ...]] = \
         field(default_factory=list)
     prefill_service_s: float = 0.0          # prompt forward + KV handoff
+    #: cache for ``min_devices`` (0 = unset; recomputed when ``plans`` is
+    #: replaced by the OOM replan path) — the admission queue reads it on
+    #: every insert/remove, which is hot at 1M-job scale
+    _min_dev: int = field(default=0, repr=False)
 
     @property
     def slo_attainment(self) -> float:
@@ -205,10 +220,15 @@ class Job:
     @property
     def min_devices(self) -> int:
         """Fewest devices any admission of this job could use — the
-        engine's re-schedule gate (scheduler-agnostic lower bound)."""
-        need = min((p.n_devices for p in self.plans), default=1)
-        if self.requested_n:
-            need = min(need, self.requested_n)
+        engine's re-schedule gate (scheduler-agnostic lower bound).
+        Cached: plans only change on the OOM replan path, which resets
+        the cache."""
+        need = self._min_dev
+        if need == 0:
+            need = min((p.n_devices for p in self.plans), default=1)
+            if self.requested_n:
+                need = min(need, self.requested_n)
+            self._min_dev = need
         return need
 
 
@@ -252,10 +272,15 @@ def snapshot_nodes(state: ClusterState) -> Dict[str, Node]:
             for k, v in nodes_map(state).items()}
 
 
-def fifo_order(queued: Sequence[Job]) -> List[Job]:
+def fifo_order(queued: Union[Sequence[Job], "AdmissionQueue"]) -> List[Job]:
     """FIFO by (arrival, id) — except preempted jobs, which come first,
     least remaining work ahead (finish nearly-done work before fresh
-    admissions).  Without preemptions this is exactly the seed order."""
+    admissions).  Without preemptions this is exactly the seed order.
+
+    The engine's ``AdmissionQueue`` maintains this order persistently
+    (a k-way merge of sorted shard chains); plain sequences are sorted."""
+    if isinstance(queued, AdmissionQueue):
+        return list(queued.ordered())
     return sorted(queued, key=_fifo_key)
 
 
@@ -263,6 +288,288 @@ def _fifo_key(j: Job):
     if j.preemptions:
         return (0, j.total_samples - j.samples_done, j.job_id)
     return (1, j.arrival, j.job_id)
+
+
+#: Debug flag (env ``REPRO_DEBUG_QUEUE=1``, or flip at runtime): every
+#: ``AdmissionQueue.min_need`` query cross-checks the incremental
+#: bookkeeping (need multiset, shard membership) against a full scan.
+DEBUG_QUEUE = os.environ.get("REPRO_DEBUG_QUEUE", "") not in ("", "0")
+
+
+class _AdmissionShard:
+    """Queued jobs sharing one plan-list object.
+
+    ``predict_plans_shared`` memoizes plan lists, so every job of one
+    (cfg, batch, seq[, zero]) class carries the *same* tuple — the seed
+    scheduler deduped no-fit checks on ``id(job.plans)``; the shard is
+    that key made persistent.  Entries are ``(_fifo_key(job), job)``:
+    ``pre`` holds preempted jobs, insort-sorted by least remaining work
+    (requeues are rare); ``fifo`` holds fresh arrivals appended in
+    arrival order.  Preempted keys lead with 0 and fresh keys with 1, so
+    ``pre`` entirely precedes ``fifo`` and the shard chain
+    ``chain(pre, fifo)`` is sorted — global FIFO order is a k-way merge.
+
+    ``need_by_type`` maps each device type to the cheapest device count
+    any plan of this list could use on it — the exact per-shard admission
+    bound checked against ``ClusterPool.idle_by_type``.
+    """
+    __slots__ = ("sid", "pid", "plans", "need_by_type", "pre", "fifo")
+
+    def __init__(self, sid: int, pid: int, plans: Sequence[ResourcePlan]):
+        self.sid = sid                      # creation order (heap tie-break)
+        self.pid = pid                      # id(plans) — the bucket key
+        self.plans = plans                  # pins the key's referent alive
+        need: Dict[str, int] = {}
+        for p in plans:
+            cur = need.get(p.device_type)
+            if cur is None or p.n_devices < cur:
+                need[p.device_type] = p.n_devices
+        self.need_by_type = need
+        self.pre: List[Tuple[tuple, Job]] = []
+        self.fifo: deque = deque()
+
+    def __len__(self) -> int:
+        return len(self.pre) + len(self.fifo)
+
+    def head(self) -> Tuple[tuple, Job]:
+        return self.pre[0] if self.pre else self.fifo[0]
+
+    def eligible(self, idle_by_type: Dict[str, int]) -> bool:
+        """Necessary condition for ``select_plan(self.plans)`` to succeed:
+        some device type's idle count covers its cheapest plan.  Exact as
+        a skip test — a plan needs ``n_devices`` idle devices of its own
+        type (memory classes only partition a type's idle count further),
+        so when every type is below its cheapest plan, every plan is
+        unsatisfiable and a skipped shard provably admits nothing."""
+        for dt, need in self.need_by_type.items():
+            if idle_by_type.get(dt, 0) >= need:
+                return True
+        return False
+
+
+class AdmissionQueue:
+    """Persistent admission priority structure — the engine's queue.
+
+    Jobs bucket into per-plan-list shards (``_AdmissionShard``); within a
+    shard, entries stay sorted by the exact ``_fifo_key``, maintained on
+    arrive/preempt/requeue by append/insort (the ``ClusterPool`` entries
+    pattern).  ``ordered()`` merges the shard chains into the exact
+    global ``fifo_order`` for non-sharded schedulers; ``HASAdmission``
+    walks shard *heads* through a heap and skips whole ineligible shards.
+
+    ``min_need`` is a counter multiset over ``Job.min_devices``: the
+    engine's capacity gate becomes a min over a handful of distinct
+    values instead of an O(queue) rescan.  Under ``DEBUG_QUEUE`` every
+    query re-derives it from a full scan and asserts equality.
+    """
+
+    def __init__(self):
+        self._shards: Dict[int, _AdmissionShard] = {}   # id(plans) -> shard
+        #: job_id -> (shard, entry key, need at insert) — keys are stable
+        #: while queued (progress/preemptions only change while running)
+        self._where: Dict[int, Tuple[_AdmissionShard, tuple, int]] = {}
+        self._need_counts: Dict[int, int] = {}          # min_devices -> n
+        self._next_sid = 0
+
+    def __len__(self) -> int:
+        return len(self._where)
+
+    def __bool__(self) -> bool:
+        return bool(self._where)
+
+    def __contains__(self, job: Job) -> bool:
+        return job.job_id in self._where
+
+    def __iter__(self) -> Iterator[Job]:
+        return self.ordered()
+
+    def append(self, job: Job) -> None:
+        assert job.job_id not in self._where, job.job_id
+        key = _fifo_key(job)
+        pid = id(job.plans)
+        shard = self._shards.get(pid)
+        if shard is None:
+            shard = self._shards[pid] = _AdmissionShard(self._next_sid, pid,
+                                                        job.plans)
+            self._next_sid += 1
+        if job.preemptions:
+            insort(shard.pre, (key, job))
+        else:
+            f = shard.fifo
+            if f and key < f[-1][0]:
+                # out-of-order fresh arrival (live submits with an older
+                # arrival stamp): sorted rebuild.  The sim path processes
+                # arrivals in time order and never takes this branch.
+                items = sorted(chain(f, [(key, job)]))
+                f.clear()
+                f.extend(items)
+            else:
+                f.append((key, job))
+        need = job.min_devices
+        self._where[job.job_id] = (shard, key, need)
+        self._need_counts[need] = self._need_counts.get(need, 0) + 1
+
+    def discard(self, job: Job) -> bool:
+        """Remove ``job`` if queued (idempotent).  Sharded admissions pop
+        their entries themselves — this covers applying a non-sharded
+        scheduler's decisions and the live ``try_admit`` bypass."""
+        entry = self._where.pop(job.job_id, None)
+        if entry is None:
+            return False
+        shard, key, need = entry
+        if key[0] == 0:                     # preempted: sorted ``pre`` list
+            i = bisect_left(shard.pre, (key,))
+            assert i < len(shard.pre) and shard.pre[i][1] is job, job.job_id
+            shard.pre.pop(i)
+        else:
+            f = shard.fifo
+            for i, ent in enumerate(f):
+                if ent[1] is job:
+                    del f[i]
+                    break
+            else:
+                raise AssertionError(f"queue desync: job {job.job_id}")
+        self._removed(shard, need)
+        return True
+
+    def pop_head(self, shard: _AdmissionShard) -> Job:
+        """Pop the shard's head entry (the sharded pass admits heads)."""
+        if shard.pre:
+            _, job = shard.pre.pop(0)
+        else:
+            _, job = shard.fifo.popleft()
+        _, _, need = self._where.pop(job.job_id)
+        self._removed(shard, need)
+        return job
+
+    def _removed(self, shard: _AdmissionShard, need: int) -> None:
+        if len(shard) == 0:
+            del self._shards[shard.pid]
+        c = self._need_counts[need] - 1
+        if c:
+            self._need_counts[need] = c
+        else:
+            del self._need_counts[need]
+
+    def min_need(self) -> float:
+        """Min over queued jobs of ``min_devices`` (inf when empty) — the
+        engine's exact re-admission gate, O(#distinct values)."""
+        if DEBUG_QUEUE:
+            self._debug_check()
+        if not self._need_counts:
+            return float("inf")
+        return min(self._need_counts)
+
+    def shards(self) -> Iterable[_AdmissionShard]:
+        return self._shards.values()
+
+    def ordered(self) -> Iterator[Job]:
+        """Exact global ``fifo_order``: k-way merge of the sorted shard
+        chains (keys are unique — they embed the job id)."""
+        chains = [chain(s.pre, s.fifo) for s in self._shards.values()]
+        return (job for _, job in heapq.merge(*chains))
+
+    def _debug_check(self) -> None:
+        jobs = [job for s in self._shards.values()
+                for _, job in chain(s.pre, s.fifo)]
+        assert len(jobs) == len(self._where), \
+            (len(jobs), len(self._where))
+        scan: Dict[int, int] = {}
+        for j in jobs:
+            scan[j.min_devices] = scan.get(j.min_devices, 0) + 1
+        assert scan == self._need_counts, (scan, self._need_counts)
+
+
+class SortedIdSet:
+    """Set of ids kept in sorted order (insort on add), so hot iteration
+    sites (``_retry_serve_scale``) stop paying a per-release
+    O(n log n) ``sorted(...)``.  Iteration yields a sorted snapshot —
+    callers mutate while iterating."""
+    __slots__ = ("_ids", "_set")
+
+    def __init__(self):
+        self._ids: List[int] = []
+        self._set: set = set()
+
+    def add(self, x: int) -> None:
+        if x not in self._set:
+            self._set.add(x)
+            insort(self._ids, x)
+
+    def discard(self, x: int) -> None:
+        if x in self._set:
+            self._set.remove(x)
+            i = bisect_left(self._ids, x)
+            assert self._ids[i] == x
+            del self._ids[i]
+
+    def __contains__(self, x: int) -> bool:
+        return x in self._set
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    def __bool__(self) -> bool:
+        return bool(self._ids)
+
+    def __iter__(self) -> Iterator[int]:
+        return iter(self._ids.copy())
+
+
+class SortedIdDict:
+    """``{id: small int}`` with sorted-id iteration and an O(#distinct)
+    ``min_value`` (a value-count multiset, like the queue's need counts) —
+    the elastic scan's ``_demoted`` index, minus its per-release
+    ``sorted(dict)`` and ``min(values())`` scans."""
+    __slots__ = ("_map", "_ids", "_val_counts")
+
+    def __init__(self):
+        self._map: Dict[int, int] = {}
+        self._ids: List[int] = []
+        self._val_counts: Dict[int, int] = {}
+
+    def __setitem__(self, k: int, v: int) -> None:
+        old = self._map.get(k)
+        if old is None:
+            insort(self._ids, k)
+        else:
+            if old == v:
+                return
+            self._drop_val(old)
+        self._map[k] = v
+        self._val_counts[v] = self._val_counts.get(v, 0) + 1
+
+    def pop(self, k: int, default=None):
+        v = self._map.pop(k, None)
+        if v is None:
+            return default
+        i = bisect_left(self._ids, k)
+        assert self._ids[i] == k
+        del self._ids[i]
+        self._drop_val(v)
+        return v
+
+    def _drop_val(self, v: int) -> None:
+        c = self._val_counts[v] - 1
+        if c:
+            self._val_counts[v] = c
+        else:
+            del self._val_counts[v]
+
+    def min_value(self) -> int:
+        return min(self._val_counts)
+
+    def __contains__(self, k: int) -> bool:
+        return k in self._map
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    def __bool__(self) -> bool:
+        return bool(self._map)
+
+    def __iter__(self) -> Iterator[int]:
+        return iter(self._ids.copy())
 
 
 class Scheduler:
@@ -277,6 +584,10 @@ class Scheduler:
     """
     name = "base"
     applies_to_pool = False          # commits to a *shared ClusterPool* itself
+    #: single-job admission on arrive is bit-identical to a full pass for
+    #: this policy (see ``LifecycleEngine._fast_admit`` for the proof
+    #: obligation) — only HAS-against-a-shared-pool sets it
+    admits_single = False
 
     def schedule(self, queued: List[Job], state: ClusterState
                  ) -> List[Tuple[Job, Tuple[Tuple[str, int], ...], int, int]]:
@@ -303,12 +614,15 @@ class HASAdmission(Scheduler):
     """
     name = "has"
     applies_to_pool = True
+    admits_single = True
 
     def schedule(self, queued, state):
         if isinstance(state, ClusterPool):
             pool = state
         else:
             pool = ClusterPool(snapshot_nodes(state).values())
+        if isinstance(queued, AdmissionQueue) and pool is state:
+            return self._schedule_sharded(queued, pool)
         select_plan = pool.select_plan
         find_placements = pool.find_placements
         out = []
@@ -332,6 +646,54 @@ class HASAdmission(Scheduler):
             pool.apply(placements)
             _record_plan(job, plan, placements)
             out.append((job, placements, plan.d, plan.t))
+        return out
+
+    def _schedule_sharded(self, queue: AdmissionQueue, pool: ClusterPool
+                          ) -> List[Tuple[Job, Tuple[Tuple[str, int], ...],
+                                          int, int]]:
+        """Sharded admission pass — bit-identical decisions to the list
+        scan above (golden-tested), without touching jobs that provably
+        cannot start:
+
+        * shard heads are walked in exact global ``fifo_order`` through a
+          heap, so the next job considered is always the one the list
+          scan would consider next among live shards;
+        * a shard whose ``eligible`` bound fails is skipped outright —
+          the bound is a necessary condition for ``select_plan``, and
+          within a pass capacity only shrinks, so an ineligible shard
+          stays infeasible for the rest of the pass (exactly when the
+          list scan would have marked it ``no_fit``);
+        * a shard whose ``select_plan`` fails is dropped for the rest of
+          the pass — the seed's ``no_fit`` dedupe, one level up.
+
+        Admitted jobs are popped from the queue here; the engine's
+        post-decision removal is an idempotent ``discard``.
+        """
+        idle_by_type = pool.idle_by_type
+        select_plan = pool.select_plan
+        find_placements = pool.find_placements
+        heap = []
+        for shard in queue.shards():
+            if shard.eligible(idle_by_type):
+                heap.append((shard.head()[0], shard.sid, shard))
+        heapq.heapify(heap)
+        out = []
+        while heap:
+            _, _, shard = heapq.heappop(heap)
+            if not shard.eligible(idle_by_type):
+                continue                    # shrank below its cheapest plan
+            plan = select_plan(shard.plans)
+            if plan is None:
+                continue                    # no-fit: drop shard this pass
+            placements = find_placements(plan)
+            if placements is None:          # unreachable on a consistent
+                continue                    # pool (select_plan just held)
+            job = queue.pop_head(shard)
+            pool.apply(placements)
+            _record_plan(job, plan, placements)
+            out.append((job, placements, plan.d, plan.t))
+            if len(shard):
+                heapq.heappush(heap, (shard.head()[0], shard.sid, shard))
         return out
 
 
@@ -400,10 +762,15 @@ class LifecycleEngine:
                  oom_detect_seconds: float = DEFAULT_OOM_DETECT_SECONDS,
                  max_oom_retries: int = 8,
                  scale_up_delay: float = DEFAULT_SCALE_UP_DELAY,
+                 retain_jobs: bool = True,
+                 on_complete: Optional[Callable[[Job], None]] = None,
                  reset: bool = False):
         self.pool = ClusterPool(nodes, reset=reset)
         self.scheduler = scheduler if scheduler is not None else HASAdmission()
         self._applies = self.scheduler.applied(self.pool)
+        # arrive fast path: single-job admission against the shared pool,
+        # exact only for schedulers that declare it (HASAdmission)
+        self._admit_single = self._applies and self.scheduler.admits_single
         self.rate_fn = rate_fn
         self.charge_overhead = charge_overhead
         self.elastic = elastic
@@ -413,27 +780,35 @@ class LifecycleEngine:
         self.oom_detect_seconds = oom_detect_seconds
         self.max_oom_retries = max_oom_retries
         self.scale_up_delay = scale_up_delay
+        #: streaming-scale knobs: with ``retain_jobs=False`` a job leaving
+        #: the system (done/failed) is dropped from ``self.jobs`` after
+        #: ``on_complete`` sees it, so a 1M-job run holds only live jobs
+        self.retain_jobs = retain_jobs
+        self.on_complete = on_complete
+        self.peak_live_jobs = 0             # max concurrent tracked jobs
         self.jobs: Dict[int, Job] = {}
-        self.queued: List[Job] = []
-        self._min_need = float("inf")       # min over queued of min_devices
+        self.queued: AdmissionQueue = AdmissionQueue()
         self._events: List[tuple] = []      # (time, seq, kind, payload, epoch)
         self._seq = 0
         self._offline: Dict[str, Node] = {}   # departed nodes, by id
         self._node_jobs: Dict[str, Set[int]] = {}   # node -> running job ids
         # jobs running below their top-ranked plan: id -> fewest devices any
         # better-ranked plan needs (the elastic scan's capacity gate)
-        self._demoted: Dict[int, int] = {}
+        self._demoted = SortedIdDict()
         self._mig_cost: Dict[object, float] = {}
         # counters
         self.sched_time_s = 0.0
         self.sched_calls = 0
+        #: ``sched_time_s`` split by triggering event kind (arrive /
+        #: finish / churn / scale / oom / migrate / reschedule)
+        self.sched_time_by_kind: Dict[str, float] = {}
         self.preemption_count = 0
         self.migration_count = 0
         self.scale_up_count = 0             # serve replicas added
         self.scale_down_count = 0           # serve replicas released
         # serve jobs running below their SLO replica target (capacity was
         # tight at scale time); retried whenever capacity frees
-        self._serve_backlog: Set[int] = set()
+        self._serve_backlog = SortedIdSet()
         self.oom_count = 0
         self.oom_failures = 0               # jobs abandoned after retries
         #: per-OOM telemetry: (time, job_id, device_type, pred, observed)
@@ -447,11 +822,11 @@ class LifecycleEngine:
         job can newly fit — a full-queue pass would make identical decisions
         (golden-tested) at O(queue) cost per submit."""
         self.jobs.setdefault(job.job_id, job)
+        self.peak_live_jobs = max(self.peak_live_jobs, len(self.jobs))
         if job.kind == "serve" and job.serve_accounted < 0:
             job.serve_accounted = now       # queue wait counts against SLO
         if not self.try_admit(job, now):
             self.queued.append(job)
-            self._min_need = min(self._min_need, job.min_devices)
         return job
 
     def try_admit(self, job: Job, now: float = 0.0) -> bool:
@@ -464,11 +839,16 @@ class LifecycleEngine:
             return False
         self.pool.apply(alloc.placements)
         _record_plan(job, alloc.plan, alloc.placements, allocation=alloc)
+        self.queued.discard(job)
         self._start(job, alloc.placements, alloc.plan.d, alloc.plan.t, now)
-        if job in self.queued:
-            self.queued.remove(job)
-            self._recompute_min_need()
         return True
+
+    def _gate_open(self) -> bool:
+        """Exact re-admission gate: only re-run the scheduler when the
+        pool could fit some queued job's cheapest plan — a skipped run
+        provably admits nothing (ROADMAP invariant, PR 1)."""
+        return bool(self.queued) \
+            and self.pool.total_idle >= self.queued.min_need()
 
     def complete_job(self, job_id: int, now: float = 0.0) -> None:
         """Live ``finish``: release capacity, restart queued jobs (the one
@@ -477,8 +857,8 @@ class LifecycleEngine:
         if job.state != "running":
             return
         self._finish(job, now)
-        if self.queued and self.pool.total_idle >= self._min_need:
-            self._run_scheduler(now)
+        if self._gate_open():
+            self._run_scheduler(now, "finish")
         self._maybe_migrate(now)
         self._retry_serve_scale(now)
 
@@ -496,8 +876,8 @@ class LifecycleEngine:
         if node.node_id in self.pool.nodes:
             return self.pool.nodes[node.node_id]
         self.pool.add_node(node)
-        if self.queued and self.pool.total_idle >= self._min_need:
-            self._run_scheduler(now)
+        if self._gate_open():
+            self._run_scheduler(now, "churn")
         self._maybe_migrate(now)
         self._retry_serve_scale(now)
         return node
@@ -513,15 +893,15 @@ class LifecycleEngine:
         for job in victims:
             self._preempt(job, now)
         self._offline[node_id] = self.pool.remove_node(node_id)
-        if self.queued and self.pool.total_idle >= self._min_need:
-            self._run_scheduler(now)
+        if self._gate_open():
+            self._run_scheduler(now, "churn")
         self._maybe_migrate(now)
         return victims
 
     def reschedule(self, now: float = 0.0) -> None:
         """Explicit ``reschedule``: re-run admission + the elastic scan."""
         if self.queued:
-            self._run_scheduler(now)
+            self._run_scheduler(now, "reschedule")
         self._maybe_migrate(now)
 
     def oom_job(self, job_id: int, observed_bytes: float,
@@ -556,107 +936,215 @@ class LifecycleEngine:
         return job
 
     # ------------------------------------------------------------- sim API
-    def run(self, jobs: Sequence[Job],
-            cluster_events: Sequence[ClusterEvent] = (),
-            rate_events: Sequence[RateEvent] = ()) -> None:
+    def run(self, jobs: Union[Sequence[Job], Iterable[Job]],
+            cluster_events: Union[Sequence[ClusterEvent],
+                                  Iterable[ClusterEvent]] = (),
+            rate_events: Union[Sequence[RateEvent],
+                               Iterable[RateEvent]] = ()) -> None:
         """Event loop over job arrivals + cluster dynamics + request-rate
-        traces (sim path).
+        traces (sim path).  Requires ``rate_fn``.
 
-        Requires ``rate_fn``.  Event order is (time, seq): arrivals carry
-        their job id, trace events and self-scheduled finishes draw from one
-        monotonic counter — with no cluster/rate events this is
+        **Sequence inputs** reproduce the seed path exactly: everything is
+        pre-pushed into one heap keyed by (time, seq) — arrivals carry
+        their job id, trace events and self-scheduled finishes draw from
+        one monotonic counter, so with no cluster/rate events this is
         bit-identical to the seed loop's ordering.
+
+        **Iterator inputs stream**: each source is pulled lazily (it must
+        yield in nondecreasing time order — asserted), so a 1M-job trace
+        never materializes.  Tie order at equal times matches the
+        pre-pushed seq numbering exactly: arrivals < cluster events <
+        rate events < heap-resident runtime events (runtime seqs are
+        allocated after every trace seq on the sequence path).
         """
         assert self.rate_fn is not None, "sim run() needs a rate_fn"
         events = self._events
-        for j in jobs:
-            self.jobs[j.job_id] = j
-            heapq.heappush(events, (j.arrival, j.job_id, ARRIVE, j, 0))
-        seq = len(jobs)
-        for ev in sorted(cluster_events,
-                         key=lambda e: (e.time, e.kind, e.node_id)):
-            heapq.heappush(events, (ev.time, seq, ev.kind, ev, 0))
-            seq += 1
-        for rev in sorted(rate_events, key=lambda e: (e.time, e.job_id)):
-            heapq.heappush(events, (rev.time, seq, RATE_CHANGE, rev, 0))
-            seq += 1
-        self._seq = seq
-        while events:
+        if isinstance(jobs, _SequenceABC) \
+                and isinstance(cluster_events, _SequenceABC) \
+                and isinstance(rate_events, _SequenceABC):
+            streams: List[list] = []
+            for j in jobs:
+                self.jobs[j.job_id] = j
+                heapq.heappush(events, (j.arrival, j.job_id, ARRIVE, j, 0))
+            self.peak_live_jobs = max(self.peak_live_jobs, len(self.jobs))
+            seq = len(jobs)
+            for ev in sorted(cluster_events,
+                             key=lambda e: (e.time, e.kind, e.node_id)):
+                heapq.heappush(events, (ev.time, seq, ev.kind, ev, 0))
+                seq += 1
+            for rev in sorted(rate_events, key=lambda e: (e.time, e.job_id)):
+                heapq.heappush(events, (rev.time, seq, RATE_CHANGE, rev, 0))
+                seq += 1
+            self._seq = seq
+        else:
+            streams = self._make_streams(jobs, cluster_events, rate_events)
+        while True:
+            # earliest stream head, respecting source priority on time ties
+            # (streams are listed arrival < cluster < rate; strict ``<``
+            # keeps the earlier-priority head on ties)
+            src = None
+            for s in streams:
+                if s[0] is not None and (src is None or s[0][0] < src[0][0]):
+                    src = s
+            if src is not None and (not events or src[0][0] <= events[0][0]):
+                t, kind, payload = src[0]
+                self._pull(src)
+                self._dispatch(t, kind, payload, 0)
+                continue
+            if not events:
+                break
             now, _, kind, payload, epoch = heapq.heappop(events)
-            if kind == ARRIVE:
-                self.makespan = max(self.makespan, now)
-                self._on_arrive(now, payload)
-            elif kind == FINISH:
-                job = payload
-                if epoch != job.epoch or job.state != "running":
-                    continue                # stale: job migrated/preempted
-                self.makespan = max(self.makespan, now)
-                self._finish(job, now)
-                if self.queued and self.pool.total_idle >= self._min_need:
-                    self._run_scheduler(now)
-                self._maybe_migrate(now)
-            elif kind == OOM:
-                job, observed = payload
-                if epoch != job.epoch or job.state != "running":
-                    continue                # stale: job migrated/preempted
-                self.makespan = max(self.makespan, now)
-                self._oom(job, observed, now)
-            elif kind == RATE_CHANGE:
-                self.set_request_rate(payload.job_id, payload.rate, now)
-            elif kind == SCALE_UP:
-                job = payload
-                if epoch != job.epoch or job.state != "running":
-                    continue                # stale: job migrated/preempted
-                self._account_serve(job, now)
-                target = self._serve_target(job)
-                if target > job.serve_replicas \
-                        or self._prefill_target(job) > job.prefill_replicas:
-                    self._scale_to(job, target, now)
-            elif kind == SCALE_DOWN:
-                job = payload
-                if epoch != job.epoch or job.state != "running":
-                    continue
-                self._account_serve(job, now)
-                target = self._serve_target(job)
-                if target < job.serve_replicas \
-                        or self._prefill_target(job) < job.prefill_replicas:
-                    self._scale_to(job, target, now)
-            elif kind == NODE_JOIN:
-                self.node_join(payload.node, payload.node_id, now)
-            elif kind == NODE_LEAVE:
-                self.node_leave(payload.node_id, now)
-            elif kind == RESCHEDULE:
-                self.reschedule(now)
-            else:
-                raise ValueError(f"unknown event kind {kind!r}")
+            self._dispatch(now, kind, payload, epoch)
+
+    def _make_streams(self, jobs, cluster_events, rate_events) -> List[list]:
+        """Lazy event sources: ``[head, iterator, to_event, last_time]``
+        per source, priority-ordered.  Sequence-typed cluster/rate inputs
+        are sorted exactly as the pre-push path sorts them; iterator
+        inputs are trusted to be time-ordered (asserted in ``_pull``)."""
+        if isinstance(cluster_events, _SequenceABC):
+            cluster_events = sorted(cluster_events,
+                                    key=lambda e: (e.time, e.kind, e.node_id))
+        if isinstance(rate_events, _SequenceABC):
+            rate_events = sorted(rate_events, key=lambda e: (e.time, e.job_id))
+        specs = [
+            (iter(jobs), lambda j: (j.arrival, ARRIVE, j)),
+            (iter(cluster_events), lambda e: (e.time, e.kind, e)),
+            (iter(rate_events), lambda e: (e.time, RATE_CHANGE, e)),
+        ]
+        streams = []
+        for it, conv in specs:
+            s = [None, it, conv, float("-inf")]
+            self._pull(s)
+            streams.append(s)
+        return streams
+
+    @staticmethod
+    def _pull(s: list) -> None:
+        item = next(s[1], None)
+        if item is None:
+            s[0] = None
+            return
+        ev = s[2](item)
+        assert ev[0] >= s[3], \
+            f"streamed events must be time-ordered ({ev[0]} < {s[3]})"
+        s[3] = ev[0]
+        s[0] = ev
+
+    def _dispatch(self, now: float, kind: str, payload, epoch: int) -> None:
+        if kind == ARRIVE:
+            self.makespan = max(self.makespan, now)
+            self._on_arrive(now, payload)
+        elif kind == FINISH:
+            job = payload
+            if epoch != job.epoch or job.state != "running":
+                return                      # stale: job migrated/preempted
+            self.makespan = max(self.makespan, now)
+            self._finish(job, now)
+            if self._gate_open():
+                self._run_scheduler(now, "finish")
+            self._maybe_migrate(now)
+        elif kind == OOM:
+            job, observed = payload
+            if epoch != job.epoch or job.state != "running":
+                return                      # stale: job migrated/preempted
+            self.makespan = max(self.makespan, now)
+            self._oom(job, observed, now)
+        elif kind == RATE_CHANGE:
+            self.set_request_rate(payload.job_id, payload.rate, now)
+        elif kind == SCALE_UP:
+            job = payload
+            if epoch != job.epoch or job.state != "running":
+                return                      # stale: job migrated/preempted
+            self._account_serve(job, now)
+            target = self._serve_target(job)
+            if target > job.serve_replicas \
+                    or self._prefill_target(job) > job.prefill_replicas:
+                self._scale_to(job, target, now)
+        elif kind == SCALE_DOWN:
+            job = payload
+            if epoch != job.epoch or job.state != "running":
+                return
+            self._account_serve(job, now)
+            target = self._serve_target(job)
+            if target < job.serve_replicas \
+                    or self._prefill_target(job) < job.prefill_replicas:
+                self._scale_to(job, target, now)
+        elif kind == NODE_JOIN:
+            self.node_join(payload.node, payload.node_id, now)
+        elif kind == NODE_LEAVE:
+            self.node_leave(payload.node_id, now)
+        elif kind == RESCHEDULE:
+            self.reschedule(now)
+        else:
+            raise ValueError(f"unknown event kind {kind!r}")
 
     # ------------------------------------------------------ event handlers
     def _on_arrive(self, now: float, job: Job) -> None:
         self.jobs.setdefault(job.job_id, job)
+        self.peak_live_jobs = max(self.peak_live_jobs, len(self.jobs))
         if job.kind == "serve" and job.serve_accounted < 0:
             job.serve_accounted = now       # queue wait counts against SLO
         self.queued.append(job)
-        self._min_need = min(self._min_need, job.min_devices)
-        self._run_scheduler(now)
+        # Exact admission gate, extended to arrivals: when even the
+        # cheapest queued plan (including this job's) cannot fit the idle
+        # pool, a full pass provably admits nothing — the O(1) gate check
+        # *is* the admission decision, counted as one scheduler call so
+        # ``sched_calls`` stays one-per-arrival like the ungated path.
+        if self.pool.total_idle < self.queued.min_need():
+            self.sched_calls += 1
+            return
+        if self._admit_single:
+            self._fast_admit(now, job)
+        else:
+            self._run_scheduler(now, "arrive")
 
-    def _run_scheduler(self, now: float) -> None:
+    def _fast_admit(self, now: float, job: Job) -> None:
+        """Arrive fast path (``admits_single`` schedulers): admission
+        considers only the arriving job, O(plans) instead of O(queue).
+
+        Exact for HAS against the shared pool: every capacity-growing
+        event ends with a gated full pass, a completed pass leaves every
+        still-queued job unsatisfiable (each shard failed ``select_plan``
+        at a capacity no smaller than the post-pass one), and between
+        passes capacity never grows without triggering another — so at
+        arrival time no *previously* queued job can be admissible, and a
+        full pass could start only this job, with exactly this placement
+        (the live ``submit_job`` contract, golden-tested on the sim
+        path)."""
+        t0 = time.perf_counter()
+        alloc = self.pool.schedule(job.plans)
+        if alloc is not None:
+            self.pool.apply(alloc.placements)
+            _record_plan(job, alloc.plan, alloc.placements, allocation=alloc)
+            self.queued.discard(job)
+        elapsed = time.perf_counter() - t0
+        self.sched_time_s += elapsed
+        self.sched_time_by_kind["arrive"] = \
+            self.sched_time_by_kind.get("arrive", 0.0) + elapsed
+        self.sched_calls += 1
+        if alloc is not None:
+            start = now + (elapsed if self.charge_overhead else 0.0)
+            self._start(job, alloc.placements, alloc.plan.d, alloc.plan.t,
+                        start)
+
+    def _run_scheduler(self, now: float, trigger: str = "other") -> None:
         t0 = time.perf_counter()
         decisions = self.scheduler.schedule(self.queued, self.pool)
         elapsed = time.perf_counter() - t0
         self.sched_time_s += elapsed
+        self.sched_time_by_kind[trigger] = \
+            self.sched_time_by_kind.get(trigger, 0.0) + elapsed
         self.sched_calls += 1
         if not decisions:
             return
         start = now + (elapsed if self.charge_overhead else 0.0)
-        started = set()
         for job, placements, d, t in decisions:
             if not self._applies:
                 self.pool.apply(placements)  # Node.take asserts capacity
+            # sharded HAS admissions already popped their queue entries;
+            # discard covers every other scheduler (idempotent)
+            self.queued.discard(job)
             self._start(job, placements, d, t, start)
-            started.add(job.job_id)
-        self.queued[:] = [j for j in self.queued if j.job_id not in started]
-        self._min_need = min((j.min_devices for j in self.queued),
-                             default=float("inf"))
 
     def _start(self, job: Job, placements, d: int, t: int,
                start: float) -> None:
@@ -701,6 +1189,16 @@ class LifecycleEngine:
         job.finish_time = now
         job.samples_done = float(job.total_samples)
         self._demoted.pop(job.job_id, None)
+        self._completed(job)
+
+    def _completed(self, job: Job) -> None:
+        """Terminal transition (done/failed): hand the job to the caller's
+        accumulator and, in streaming mode (``retain_jobs=False``), drop
+        it from the live map so a 1M-job sim holds only live jobs."""
+        if self.on_complete is not None:
+            self.on_complete(job)
+        if not self.retain_jobs:
+            self.jobs.pop(job.job_id, None)
 
     def _oom(self, job: Job, observed: float, now: float) -> None:
         """``oom`` event: kill, feed back, requeue (or fail after retries).
@@ -746,15 +1244,17 @@ class LifecycleEngine:
                 plans = tuple(self.replan_fn(job))
                 if plans:
                     job.plans = plans
+                    job._min_dev = 0        # plan list changed: drop cache
                 else:                       # no device can ever fit it now
                     job.state = "failed"
                     self.oom_failures += 1
         if job.state == "queued":
             self.queued.append(job)
-            self._min_need = min(self._min_need, job.min_devices)
+        else:
+            self._completed(job)
         # the released capacity may admit queued work (incl. this job)
-        if self.queued and self.pool.total_idle >= self._min_need:
-            self._run_scheduler(now)
+        if self._gate_open():
+            self._run_scheduler(now, "oom")
         self._maybe_migrate(now)
         self._retry_serve_scale(now)
 
@@ -776,7 +1276,6 @@ class LifecycleEngine:
         self.preemption_count += 1
         self._demoted.pop(job.job_id, None)
         self.queued.append(job)
-        self._min_need = min(self._min_need, job.min_devices)
 
     # --------------------------------------------------- elastic migration
     def _maybe_migrate(self, now: float) -> None:
@@ -793,10 +1292,10 @@ class LifecycleEngine:
         # exact capacity gate (mirrors the admission min_need gate): no
         # better-ranked plan can be satisfiable with fewer idle devices than
         # its device count, so a skipped scan cannot change decisions
-        if self.pool.total_idle < min(self._demoted.values()):
+        if self.pool.total_idle < self._demoted.min_value():
             return
         migrated = False
-        for jid in sorted(self._demoted):
+        for jid in self._demoted:           # sorted snapshot (SortedIdDict)
             job = self.jobs[jid]
             if job.state != "running" or job.plan is None:
                 self._demoted.pop(jid, None)
@@ -857,20 +1356,24 @@ class LifecycleEngine:
             self._track_demotion(job)
         # migrations released their old (often different-class) placements;
         # queued jobs may now fit — one more admission pass, same exact gate
-        if migrated and self.queued and self.pool.total_idle >= self._min_need:
-            self._run_scheduler(now)
+        if migrated and self._gate_open():
+            self._run_scheduler(now, "migrate")
 
     def _migration_seconds(self, job: Job) -> float:
         """Checkpoint-restore cost of moving/resuming this job, from the
-        serialized training-state size (``ckpt.checkpoint``)."""
+        serialized training-state size (``ckpt.checkpoint``).  LoRA
+        finetune jobs move only adapters + optimizer slices — near-free."""
         if job.cfg is None:
             return 0.0
-        cost = self._mig_cost.get(job.cfg)
+        rank = job.lora_rank if job.kind == "finetune" else 0
+        key = (job.cfg, rank)
+        cost = self._mig_cost.get(key)
         if cost is None:
             from repro.ckpt.checkpoint import migration_seconds
             cost = migration_seconds(job.cfg,
-                                     bandwidth=self.migration_bandwidth)
-            self._mig_cost[job.cfg] = cost
+                                     bandwidth=self.migration_bandwidth,
+                                     lora_rank=rank)
+            self._mig_cost[key] = cost
         return cost
 
     # ------------------------------------------------------------ serving
@@ -1029,9 +1532,8 @@ class LifecycleEngine:
             self._serve_backlog.add(job.job_id)
         else:
             self._serve_backlog.discard(job.job_id)
-        if released and self.queued \
-                and self.pool.total_idle >= self._min_need:
-            self._run_scheduler(now)
+        if released and self._gate_open():
+            self._run_scheduler(now, "scale")
 
     def _retry_serve_scale(self, now: float) -> None:
         """Capacity freed: serve jobs parked below their replica target get
@@ -1039,7 +1541,7 @@ class LifecycleEngine:
         short — the train-only golden path never enters."""
         if not self._serve_backlog:
             return
-        for jid in sorted(self._serve_backlog):
+        for jid in self._serve_backlog:     # sorted snapshot (SortedIdSet)
             job = self.jobs.get(jid)
             if job is None or job.state != "running" \
                     or job.kind != "serve":
@@ -1128,6 +1630,3 @@ class LifecycleEngine:
             if ids is not None:
                 ids.discard(job.job_id)
 
-    def _recompute_min_need(self) -> None:
-        self._min_need = min((j.min_devices for j in self.queued),
-                             default=float("inf"))

@@ -29,7 +29,11 @@ class Orchestrator:
     State lives in a long-lived ``ClusterPool`` inside the shared
     ``LifecycleEngine``, so every HAS pass is an indexed lookup rather than
     a cluster scan — allocation/release keep the per-class idle counters in
-    sync incrementally."""
+    sync incrementally.  The engine's queue is the sharded
+    ``AdmissionQueue``: live arrivals take the O(plans) single-job fast
+    path, and release-triggered passes walk only shards whose cheapest
+    plan could fit the idle counters — decisions stay bit-identical to a
+    full FIFO scan (the control-plane-at-scale invariant, ROADMAP)."""
 
     def __init__(self, nodes: Sequence[Node]):
         self.engine = LifecycleEngine(nodes, HASAdmission())

@@ -8,10 +8,13 @@ scheduler hot path), not on machine noise.
 import copy
 import time
 
+import pytest
+
 from benchmarks.sched_scale import make_scaled_cluster as _scaled_cluster
 from repro.cluster.schedulers import FrenzyScheduler, SiaScheduler
-from repro.cluster.simulator import simulate
-from repro.cluster.traces import new_workload, scale_workload
+from repro.cluster.simulator import simulate, simulate_stream
+from repro.cluster.traces import (mixed_scale_workload_iter, new_workload,
+                                  scale_workload)
 from repro.core.orchestrator import PAPER_SIM_CLUSTER, make_cluster
 
 
@@ -43,6 +46,37 @@ def test_scheduler_overhead_does_not_scale_with_nodes():
                        FrenzyScheduler(), charge_overhead=False)
         best = min(best, res.sched_time_s / res.sched_calls)
     assert best < 500e-6, f"scheduler call scales with cluster: {best*1e6:.0f}us"
+
+
+@pytest.mark.slow
+def test_simulate_100k_nodes_50k_jobs_single_digit_seconds():
+    """The PR 7 frontier cell: 100k nodes x 50k mixed train/finetune jobs
+    must simulate in single-digit seconds (measured ~2-3 s here; the bound
+    leaves ~10x headroom for cold CI machines).  Trace generation and
+    cluster construction run outside the timer — the guard is on the
+    control plane, not the rng."""
+    nodes = _scaled_cluster(100_000)
+    types = sorted({n.device_type for n in nodes})
+    jobs = list(mixed_scale_workload_iter(40_000, 10_000, types, seed=23))
+    t0 = time.perf_counter()
+    res = simulate(jobs, nodes, FrenzyScheduler(), charge_overhead=False)
+    wall = time.perf_counter() - t0
+    assert res.unfinished == 0
+    assert wall < 30.0, f"100k x 50k control-plane regression: {wall:.1f}s"
+
+
+@pytest.mark.slow
+def test_streamed_sim_memory_stays_bounded():
+    """Streamed 100k-job sim on 10k nodes: the engine must only ever hold
+    live jobs (peak well under the trace size), and still finish every
+    job."""
+    nodes = _scaled_cluster(10_000)
+    types = sorted({n.device_type for n in nodes})
+    res = simulate_stream(
+        mixed_scale_workload_iter(80_000, 20_000, types, seed=23),
+        nodes, FrenzyScheduler(), charge_overhead=False)
+    assert res.n_jobs == 100_000 and res.unfinished == 0
+    assert res.peak_live_jobs < 5_000
 
 
 def test_sia_ilp_queue_depth_does_not_blow_up():
