@@ -17,12 +17,15 @@
 #                     benchmark's quick cell plus a tiny continuous-
 #                     batching decode on the local backend — run both
 #                     unified and disaggregated (prefill/decode split)
+#   make failure-smoke  failure plane end-to-end smoke: the checkpoint-
+#                     policy quick cell + the backoff storm, then the
+#                     failure-plane test file
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 tier1-fast bench-smoke bench bench-json bench-compare \
-	memcheck serve-smoke
+	memcheck serve-smoke failure-smoke
 
 tier1:
 	$(PY) -m pytest -x -q
@@ -59,3 +62,7 @@ serve-smoke:
 		--prompt-len 16 --gen 8 --continuous 5
 	$(PY) -m repro.launch.serve --arch llama3.2-3b --smoke --batch 2 \
 		--prompt-len 16 --gen 8 --continuous 5 --disaggregated
+
+failure-smoke:
+	$(PY) -m benchmarks.failure_resilience --quick
+	$(PY) -m pytest -x -q tests/test_failure_plane.py

@@ -52,12 +52,30 @@ KEY_RULES: Tuple[Tuple[Callable[[str], bool], str, str], ...] = (
      "us", "lower"),
     (lambda n: n.startswith("kernels/decode_"), "us", "lower"),
     (lambda n: "/jct_reduction_vs_" in n, "derived", "higher"),
+    # failure plane: durable goodput fraction up, lost work down, and
+    # backoff must keep abandoning fewer jobs than the hot-loop baseline
+    (lambda n: n.startswith("failure_resilience/") and "/goodput_" in n,
+     "derived", "higher"),
+    (lambda n: n.startswith("failure_resilience/") and "/lost_work_s_" in n,
+     "derived", "lower"),
+    (lambda n: n.endswith("/abandoned_backoff"), "derived", "lower"),
+    (lambda n: n.endswith("/abandon_reduction"), "derived", "higher"),
     (lambda n: n.startswith("serve_autoscale/") and "/slo_" in n,
      "derived", "higher"),
     (lambda n: n.endswith("/gpu_s_saving"), "derived", "higher"),
     (lambda n: "/tok_per_dev_s_" in n, "derived", "higher"),
     (lambda n: "/p95_latency_" in n, "derived", "lower"),
 )
+
+
+def _baseline_key(path: str) -> Tuple[str, int]:
+    """Chronological sort key for ``BENCH_<date>[.n].json`` names: plain
+    lexicographic sorting puts ``BENCH_x.json`` *after* ``BENCH_x.2.json``
+    ('j' > '2'), so same-day suffix-numbered runs would never be picked
+    as the newest baseline."""
+    stem = os.path.basename(path)[len("BENCH_"):-len(".json")]
+    date, _, suffix = stem.partition(".")
+    return date, int(suffix) if suffix.isdigit() else 0
 
 
 def classify(name: str) -> Optional[Tuple[str, str]]:
@@ -139,7 +157,8 @@ def main(argv=None) -> int:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     baseline_path = args.baseline
     if not baseline_path:
-        cands = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+        cands = sorted(glob.glob(os.path.join(root, "BENCH_*.json")),
+                       key=_baseline_key)
         if not cands:
             print("compare: no committed BENCH_*.json baseline", flush=True)
             return 2

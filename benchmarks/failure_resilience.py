@@ -1,0 +1,152 @@
+"""Failure resilience: goodput under crash-faults, checkpoint policy arms.
+
+Two experiments, all virtual-clock deterministic (seeded traces, no wall
+time in any gated number):
+
+**Checkpoint policy grid** — for each (cluster size, MTBF scale) cell:
+a contended long-job trace plus a ``traces.failure_schedule`` fault
+trace (exponential per-node inter-failure times from the device
+catalog's MTBF), simulated once per arm with identical jobs and faults:
+
+* **none**  — no periodic checkpoints: a crash rolls the job back to its
+  last graceful event (the seed behaviour under ``node_fail``).
+* **fixed** — a 600 s wall interval, progress stalls one save per cycle.
+* **yd**    — Young–Daly: per-job ``sqrt(2*C*M)`` interval from the
+  placement's aggregate MTBF; the optimal lost-work/overhead trade.
+
+Gated rows: ``goodput_<arm>`` (higher is better) and
+``lost_work_s_<arm>`` (lower), plus an ungated summary row with crash
+counts, checkpoint overhead, and JCT per arm.
+
+**Backoff vs hot-loop** — a 10-minute failure storm (node MTBF ~100 s,
+fast rejoin) over long jobs with a small combined restart budget.  The
+hot arm restarts instantly, lands on capacity that is still failing,
+and burns its budget inside the storm; exponential backoff paces the
+same budget across the storm and keeps jobs alive:
+
+    failure_resilience/storm/abandoned_hot      (ungated, context)
+    failure_resilience/storm/abandoned_backoff  (gated: lower)
+    failure_resilience/storm/abandon_reduction  (gated: higher)
+
+    PYTHONPATH=src python -m benchmarks.failure_resilience [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import time
+
+from benchmarks.sched_scale import make_scaled_cluster
+from repro.cluster.schedulers import FrenzyScheduler
+from repro.cluster.simulator import simulate
+from repro.cluster.traces import failure_schedule, scale_workload
+from repro.core.orchestrator import make_cluster
+
+# (n_nodes, n_jobs, mean_interarrival_s, mean_minutes, mtbf_scale): long
+# jobs (an hour of work) so un-checkpointed crash loss is expensive, MTBF
+# compressed so the horizon sees real failure pressure
+FULL_GRID = [(100, 1_000, 1.0, 60.0, 0.05),
+             (100, 1_000, 1.0, 60.0, 0.02),
+             (1_000, 5_000, 0.1, 60.0, 0.05)]
+QUICK_GRID = [(100, 1_000, 1.0, 60.0, 0.02)]
+
+FIXED_INTERVAL_S = 600.0
+RESTART_BACKOFF_S = 15.0
+
+#: checkpoint-policy arms: (row suffix, ckpt_policy, fixed interval)
+ARMS = (("none", None, 0.0),
+        ("fixed", "fixed", FIXED_INTERVAL_S),
+        ("yd", "young_daly", 0.0))
+
+# storm cell: MTBF ~100 s per node for 10 minutes, 15 s rejoins, budget 4
+STORM_NODES = 16
+STORM_JOBS = 60
+STORM_HORIZON_S = 600.0
+STORM_MTBF_SCALE = 1e-3
+STORM_DOWNTIME_S = 15.0
+STORM_BUDGET = 4
+STORM_BACKOFF_S = 60.0
+
+
+def _policy_cell(n_nodes, n_jobs, interarrival, mean_minutes, mtbf_scale):
+    nodes = make_scaled_cluster(n_nodes)
+    types = sorted({n.device_type for n in nodes})
+    jobs = scale_workload(n_jobs, types, seed=61,
+                          mean_interarrival=interarrival,
+                          mean_minutes=mean_minutes)
+    # fault horizon ~ the fault-free makespan scale: arrivals + queue drain
+    horizon = n_jobs * interarrival + 6 * mean_minutes * 60.0
+    fails = failure_schedule(nodes, horizon=horizon, seed=67,
+                             mtbf_scale=mtbf_scale)
+    cell = f"failure_resilience/n{n_nodes}_m{mtbf_scale:g}"
+    rows, summary = [], []
+    for arm, policy, fixed_s in ARMS:
+        t0 = time.perf_counter()
+        res = simulate(copy.deepcopy(jobs), copy.deepcopy(nodes),
+                       FrenzyScheduler(), charge_overhead=False,
+                       cluster_events=list(fails),
+                       ckpt_policy=policy,
+                       ckpt_fixed_interval_s=fixed_s,
+                       restart_backoff_s=RESTART_BACKOFF_S)
+        wall = time.perf_counter() - t0
+        rows.append((f"{cell}/goodput_{arm}", 0.0, f"{res.goodput:.4f}"))
+        rows.append((f"{cell}/lost_work_s_{arm}", 0.0,
+                     f"{res.lost_work_s:.0f}"))
+        summary.append(
+            f"{arm}:crash={res.crashes}_lost={res.lost_work_s:.0f}s"
+            f"_ovh={res.ckpt_overhead_s:.0f}s_jct={res.avg_jct:.0f}s"
+            f"_wall={wall:.1f}s")
+    rows.append((f"{cell}/info", 0.0,
+                 f"fails={sum(1 for _ in fails) // 2}_" + "_".join(summary)))
+    return rows
+
+
+def _storm_cell():
+    nodes = make_cluster([(STORM_NODES, 8, "RTX3090")])
+    jobs = scale_workload(STORM_JOBS, ["RTX3090"], seed=71,
+                          mean_interarrival=0.5, mean_minutes=30.0)
+    storm = failure_schedule(nodes, horizon=STORM_HORIZON_S, seed=73,
+                             mtbf_scale=STORM_MTBF_SCALE,
+                             mean_downtime=STORM_DOWNTIME_S)
+    out = {}
+    for arm, backoff in (("hot", 0.0), ("backoff", STORM_BACKOFF_S)):
+        res = simulate(copy.deepcopy(jobs), copy.deepcopy(nodes),
+                       FrenzyScheduler(), charge_overhead=False,
+                       cluster_events=list(storm),
+                       ckpt_policy="young_daly",
+                       restart_backoff_s=backoff,
+                       max_restarts=STORM_BUDGET)
+        out[arm] = res
+    hot, back = out["hot"], out["backoff"]
+    return [
+        ("failure_resilience/storm/abandoned_hot", 0.0,
+         f"{hot.crash_failures}"),
+        ("failure_resilience/storm/abandoned_backoff", 0.0,
+         f"{back.crash_failures}"),
+        ("failure_resilience/storm/abandon_reduction", 0.0,
+         f"{hot.crash_failures - back.crash_failures}"),
+        ("failure_resilience/storm/info", 0.0,
+         f"fails={sum(1 for e in storm if e.kind == 'node_fail')}"
+         f"_crashes={hot.crashes}->{back.crashes}"
+         f"_goodput={hot.goodput:.3f}->{back.goodput:.3f}"),
+    ]
+
+
+def run(quick: bool = False):
+    rows = []
+    for cell in (QUICK_GRID if quick else FULL_GRID):
+        rows.extend(_policy_cell(*cell))
+    rows.extend(_storm_cell())
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    for name, us, derived in run(quick=args.quick):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,10 +23,11 @@ def main() -> None:
                     help="also write rows to this JSON file")
     args = ap.parse_args()
 
-    from benchmarks import (elastic_churn, jct_newworkload, jct_traces,
-                            kernels, memory_accuracy, oom_resilience,
-                            roofline, sched_overhead, sched_scale,
-                            serve_autoscale, train_step)
+    from benchmarks import (elastic_churn, failure_resilience,
+                            jct_newworkload, jct_traces, kernels,
+                            memory_accuracy, oom_resilience, roofline,
+                            sched_overhead, sched_scale, serve_autoscale,
+                            train_step)
     suites = [
         ("sched_overhead", sched_overhead.run),        # Fig 5a
         # --skip-slow trims the scale grid to its small corner (the full
@@ -36,6 +37,9 @@ def main() -> None:
         ("elastic_churn", lambda: elastic_churn.run(quick=args.skip_slow)),
         # memory feedback plane vs static margin under misprediction
         ("oom_resilience", lambda: oom_resilience.run(quick=args.skip_slow)),
+        # checkpoint policy + backoff under crash-faults (failure plane)
+        ("failure_resilience",
+         lambda: failure_resilience.run(quick=args.skip_slow)),
         # SLO-aware serve autoscaling vs static replicas (serving plane)
         ("serve_autoscale",
          lambda: serve_autoscale.run(quick=args.skip_slow)),

@@ -53,6 +53,16 @@ def migration_seconds(cfg, bandwidth: float = 16 * 2 ** 30,
     return 2.0 * state_bytes(cfg, lora_rank=lora_rank) / float(bandwidth)
 
 
+def checkpoint_seconds(cfg, bandwidth: float = 16 * 2 ** 30,
+                      lora_rank: int = 0) -> float:
+    """One durable periodic-checkpoint save: the serialized training state
+    streamed out once at ``bandwidth`` bytes/s (the restore half is priced
+    separately by ``migration_seconds`` when a restart happens).  This is
+    the ``C`` of the Young–Daly interval ``sqrt(2*C*MTBF)`` — for LoRA
+    finetunes it is near-free because only the adapters are saved."""
+    return state_bytes(cfg, lora_rank=lora_rank) / float(bandwidth)
+
+
 def kv_handoff_bytes(cfg, batch: int, cache_len: int) -> float:
     """KV/SSM-cache bytes one prefilled request batch occupies — what a
     prefill replica ships to a decode replica in disaggregated serving."""

@@ -65,6 +65,26 @@ class SimResult:
     #: actually spent its time (benchmarks/sched_scale telemetry)
     sched_time_by_kind: Dict[str, float] = field(default_factory=dict)
     peak_live_jobs: int = 0                 # max concurrently-live jobs
+    # failure plane (PR 8; all zero on fault-free runs)
+    node_fails: int = 0                     # abrupt node crash-faults
+    crashes: int = 0                        # job crashes (fault victims)
+    crash_failures: int = 0                 # jobs abandoned over the budget
+    replica_fails: int = 0                  # serve replicas lost to faults
+    lost_work_s: float = 0.0                # compute rolled back by crashes
+    ckpt_overhead_s: float = 0.0            # run time spent saving state
+    useful_work_s: float = 0.0              # durable non-serve compute
+    #: per-victim crash log: (time, node_id, job_id, lost_work_s)
+    failure_log: Sequence[Tuple[float, str, int, float]] = ()
+
+    @property
+    def goodput(self) -> float:
+        """Durable-progress fraction of all non-serve compute: useful over
+        useful + rolled-back + checkpoint-stall seconds (NaN with no
+        accounted work)."""
+        total = self.useful_work_s + self.lost_work_s + self.ckpt_overhead_s
+        if total <= 0.0:
+            return float("nan")
+        return self.useful_work_s / total
 
     @property
     def finished(self) -> List[Job]:
@@ -176,13 +196,18 @@ def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
              oom_check_fn: OomCheckFn = None,
              replan_fn: ReplanFn = None,
              max_oom_retries: int = 8,
-             scale_up_delay: float = DEFAULT_SCALE_UP_DELAY
+             scale_up_delay: float = DEFAULT_SCALE_UP_DELAY,
+             ckpt_policy: str = None,
+             ckpt_fixed_interval_s: float = 0.0,
+             restart_backoff_s: float = 0.0,
+             max_restarts: int = None
              ) -> SimResult:
     """Drive the shared lifecycle engine over a trace.
 
     charge_overhead: add measured scheduler wall time to the virtual
     clock (the paper's Fig 5a overhead feeds its JCT comparison).
-    cluster_events: node_join/node_leave/reschedule dynamics (churn/spot).
+    cluster_events: node_join/node_leave/node_fail/reschedule dynamics
+    (churn/spot/failure traces).
     rate_events: request_rate_change traces for serve jobs
     (``traces.serve_workload``) — the SLO autoscaler reacts to them.
     elastic: allow running jobs to migrate to better-ranked plans.
@@ -192,6 +217,10 @@ def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
     replan_fn: post-OOM plan re-ranking (against the updated corrector).
     scale_up_delay: seconds from a serve scale-up decision to the replicas
     serving (0 = warm-pool provisioning).
+    ckpt_policy / ckpt_fixed_interval_s / restart_backoff_s /
+    max_restarts: failure plane (PR 8) — periodic-checkpoint policy
+    (None | "young_daly" | "fixed") and the crashed-job restart budget;
+    all dormant at the defaults.
     """
     engine = LifecycleEngine(nodes, scheduler,
                              charge_overhead=charge_overhead,
@@ -201,6 +230,10 @@ def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
                              replan_fn=replan_fn,
                              max_oom_retries=max_oom_retries,
                              scale_up_delay=scale_up_delay,
+                             ckpt_policy=ckpt_policy,
+                             ckpt_fixed_interval_s=ckpt_fixed_interval_s,
+                             restart_backoff_s=restart_backoff_s,
+                             max_restarts=max_restarts,
                              reset=True)
     pool_nodes = engine.pool.nodes
     engine.rate_fn = lambda job, placements, d, t: \
@@ -223,7 +256,15 @@ def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
                      scale_ups=engine.scale_up_count,
                      scale_downs=engine.scale_down_count,
                      sched_time_by_kind=dict(engine.sched_time_by_kind),
-                     peak_live_jobs=engine.peak_live_jobs)
+                     peak_live_jobs=engine.peak_live_jobs,
+                     node_fails=engine.node_fail_count,
+                     crashes=engine.crash_count,
+                     crash_failures=engine.crash_failures,
+                     replica_fails=engine.replica_fail_count,
+                     lost_work_s=engine.lost_work_s,
+                     ckpt_overhead_s=engine.ckpt_overhead_s,
+                     useful_work_s=engine.useful_work_s,
+                     failure_log=tuple(engine.failure_log))
 
 
 @dataclass
@@ -249,6 +290,21 @@ class StreamResult:
     oom_failures: int = 0
     scale_ups: int = 0
     scale_downs: int = 0
+    # failure plane (PR 8; all zero on fault-free runs)
+    node_fails: int = 0
+    crashes: int = 0
+    crash_failures: int = 0
+    lost_work_s: float = 0.0
+    ckpt_overhead_s: float = 0.0
+    useful_work_s: float = 0.0
+
+    @property
+    def goodput(self) -> float:
+        """Durable-progress fraction (see ``SimResult.goodput``)."""
+        total = self.useful_work_s + self.lost_work_s + self.ckpt_overhead_s
+        if total <= 0.0:
+            return float("nan")
+        return self.useful_work_s / total
 
     @property
     def avg_jct(self) -> float:
@@ -275,7 +331,11 @@ def simulate_stream(jobs: Iterable[Job], nodes: Sequence[Node],
                     oom_check_fn: OomCheckFn = None,
                     replan_fn: ReplanFn = None,
                     max_oom_retries: int = 8,
-                    scale_up_delay: float = DEFAULT_SCALE_UP_DELAY
+                    scale_up_delay: float = DEFAULT_SCALE_UP_DELAY,
+                    ckpt_policy: str = None,
+                    ckpt_fixed_interval_s: float = 0.0,
+                    restart_backoff_s: float = 0.0,
+                    max_restarts: int = None
                     ) -> StreamResult:
     """Drive the lifecycle engine over *streamed* traces: ``jobs`` (and
     the event traces) may be generators (``traces.scale_workload_iter``
@@ -308,6 +368,10 @@ def simulate_stream(jobs: Iterable[Job], nodes: Sequence[Node],
                              replan_fn=replan_fn,
                              max_oom_retries=max_oom_retries,
                              scale_up_delay=scale_up_delay,
+                             ckpt_policy=ckpt_policy,
+                             ckpt_fixed_interval_s=ckpt_fixed_interval_s,
+                             restart_backoff_s=restart_backoff_s,
+                             max_restarts=max_restarts,
                              retain_jobs=False,
                              on_complete=on_complete,
                              reset=True)
@@ -332,4 +396,10 @@ def simulate_stream(jobs: Iterable[Job], nodes: Sequence[Node],
                         ooms=engine.oom_count,
                         oom_failures=engine.oom_failures,
                         scale_ups=engine.scale_up_count,
-                        scale_downs=engine.scale_down_count)
+                        scale_downs=engine.scale_down_count,
+                        node_fails=engine.node_fail_count,
+                        crashes=engine.crash_count,
+                        crash_failures=engine.crash_failures,
+                        lost_work_s=engine.lost_work_s,
+                        ckpt_overhead_s=engine.ckpt_overhead_s,
+                        useful_work_s=engine.useful_work_s)

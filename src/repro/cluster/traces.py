@@ -25,8 +25,9 @@ from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
 
 from repro.configs.base import ModelConfig
-from repro.core.lifecycle import (ClusterEvent, RateEvent, NODE_JOIN,
-                                  NODE_LEAVE)
+from repro.core.devices import DEVICE_TYPES
+from repro.core.lifecycle import (ClusterEvent, RateEvent, NODE_FAIL,
+                                  NODE_JOIN, NODE_LEAVE)
 from repro.core.marp import (default_serve_slo, predict_plans_shared,
                              predict_serve_plans_shared, replicas_for_slo,
                              serve_plan_capacity)
@@ -248,16 +249,22 @@ def churn_schedule_iter(nodes: Sequence, *, horizon: float,
 
 def spot_schedule(nodes: Sequence, *, horizon: float, n_waves: int = 3,
                   wave_frac: float = 0.1, seed: int = 0,
-                  mean_downtime: Optional[float] = None
-                  ) -> List[ClusterEvent]:
+                  mean_downtime: Optional[float] = None,
+                  crash: bool = False) -> List[ClusterEvent]:
     """Spot-fleet reclamation (ShuntServe-style): the market reclaims
     correlated *waves* of nodes — each wave takes out ``wave_frac`` of the
     fleet at (almost) the same instant — and replacement capacity is
-    provisioned back after an exponential delay per node."""
+    provisioned back after an exponential delay per node.
+
+    ``crash=True`` makes the reclaims *abrupt* ``node_fail`` events (no
+    checkpoint on the way out — the failure plane's crash semantics)
+    instead of graceful ``node_leave``; times, nodes, and rng draws are
+    identical, only the event kind changes."""
     rng = random.Random(500 + seed)
     if horizon <= 0 or n_waves <= 0:
         return []
     down = mean_downtime if mean_downtime is not None else horizon * 0.15
+    leave_kind = NODE_FAIL if crash else NODE_LEAVE
     pool = list(nodes)
     events: List[ClusterEvent] = []
     # process waves in time order so each wave reclaims only nodes that are
@@ -275,12 +282,66 @@ def spot_schedule(nodes: Sequence, *, horizon: float, n_waves: int = 3,
             t_leave = t_wave + rng.uniform(0.0, 1.0)   # near-simultaneous
             t_join = t_leave + rng.expovariate(1.0 / down)
             offline_until[node.node_id] = t_join
-            events.append(ClusterEvent(time=t_leave, kind=NODE_LEAVE,
+            events.append(ClusterEvent(time=t_leave, kind=leave_kind,
                                        node_id=node.node_id))
             events.append(ClusterEvent(time=t_join, kind=NODE_JOIN,
                                        node_id=node.node_id))
     events.sort(key=lambda e: (e.time, e.kind, e.node_id))
     return events
+
+
+def failure_schedule(nodes: Sequence, *, horizon: float, seed: int = 0,
+                     mtbf_scale: float = 1.0,
+                     mean_downtime: Optional[float] = None
+                     ) -> List[ClusterEvent]:
+    """Crash-fault injection from the device catalog: each node fails as a
+    Poisson process with hazard ``devices / (mtbf_s * mtbf_scale)`` of its
+    device type (``mtbf_scale < 1`` models a flakier fleet), is repaired
+    after an exponential downtime (default mean: 5% of the horizon), and
+    can fail again after rejoining.  Every ``node_fail`` is paired with a
+    ``node_join``, so capacity always eventually returns.  List form of
+    ``failure_schedule_iter`` (bit-identical)."""
+    return list(failure_schedule_iter(nodes, horizon=horizon, seed=seed,
+                                      mtbf_scale=mtbf_scale,
+                                      mean_downtime=mean_downtime))
+
+
+def failure_schedule_iter(nodes: Sequence, *, horizon: float, seed: int = 0,
+                          mtbf_scale: float = 1.0,
+                          mean_downtime: Optional[float] = None
+                          ) -> Iterator[ClusterEvent]:
+    """Streaming ``failure_schedule``: a heap of one pending event per
+    node, so memory scales with the fleet while the event *count* scales
+    with ``horizon / MTBF`` — a year-long trace never materializes.
+
+    Streaming-rng discipline (PR 7 contract): every exponential draw
+    happens when its event is popped, in nondecreasing event-time order —
+    the same order a list builder would draw in — so the list and iterator
+    forms are bit-identical and downstream consumers can rely on
+    ``_pull``'s time-ordering assertion."""
+    rng = random.Random(900 + seed)
+    if horizon <= 0:
+        return
+    down = mean_downtime if mean_downtime is not None else horizon * 0.05
+    heap: List[tuple] = []
+    for i, node in enumerate(nodes):
+        dev = DEVICE_TYPES[node.device_type]
+        node_mtbf = dev.mtbf_s * mtbf_scale / max(node.total, 1)
+        t = rng.expovariate(1.0 / node_mtbf)
+        if t < horizon:
+            heapq.heappush(heap, (t, i, NODE_FAIL, node.node_id, node_mtbf))
+    while heap:
+        t, i, kind, node_id, node_mtbf = heapq.heappop(heap)
+        yield ClusterEvent(time=t, kind=kind, node_id=node_id)
+        if kind == NODE_FAIL:
+            # repair: the node always comes back (possibly past horizon)
+            t_join = t + rng.expovariate(1.0 / down)
+            heapq.heappush(heap, (t_join, i, NODE_JOIN, node_id, node_mtbf))
+        else:
+            t_next = t + rng.expovariate(1.0 / node_mtbf)
+            if t_next < horizon:
+                heapq.heappush(heap,
+                               (t_next, i, NODE_FAIL, node_id, node_mtbf))
 
 
 def diurnal_rate_trace(*, horizon: float, base_rate: float,

@@ -19,23 +19,31 @@ class DeviceType:
     hbm_bw: float            # bytes/s
     link_bw: float           # bytes/s per chip intra-node (NVLink/ICI)
     inter_bw: float          # bytes/s per chip cross-node (PCIe+IB / DCN)
+    #: mean time between crash-faults of ONE device, seconds.  The failure
+    #: plane derives everything from this: a node's hazard is
+    #: devices-per-node / mtbf_s, an n-device plan's aggregate MTBF is
+    #: mtbf_s / n (independent exponentials), and the Young–Daly default
+    #: checkpoint interval is sqrt(2 * C * MTBF_agg).  Datacenter parts
+    #: sit around a month, consumer cards lower, TPU pods higher.
+    mtbf_s: float = 30.0 * 86400.0
 
 
 GB = 1024 ** 3
 TF = 1e12
+DAY = 86400.0
 
 DEVICE_TYPES: Dict[str, DeviceType] = {
     # --- paper's GPU catalog ---
-    "A100-40G":  DeviceType("A100-40G",  40 * GB, 312 * TF, 1.55e12, 600e9, 64e9),
-    "A100-80G":  DeviceType("A100-80G",  80 * GB, 312 * TF, 2.0e12,  600e9, 64e9),
-    "A800-80G":  DeviceType("A800-80G",  80 * GB, 312 * TF, 2.0e12,  400e9, 64e9),
-    "RTX2080Ti": DeviceType("RTX2080Ti", 11 * GB, 26.9 * TF, 616e9,  32e9,  16e9),
-    "RTX6000":   DeviceType("RTX6000",   24 * GB, 130 * TF, 672e9,   32e9,  16e9),
-    "RTX3090":   DeviceType("RTX3090",   24 * GB, 71 * TF,  936e9,   32e9,  16e9),
+    "A100-40G":  DeviceType("A100-40G",  40 * GB, 312 * TF, 1.55e12, 600e9, 64e9, 30 * DAY),
+    "A100-80G":  DeviceType("A100-80G",  80 * GB, 312 * TF, 2.0e12,  600e9, 64e9, 30 * DAY),
+    "A800-80G":  DeviceType("A800-80G",  80 * GB, 312 * TF, 2.0e12,  400e9, 64e9, 30 * DAY),
+    "RTX2080Ti": DeviceType("RTX2080Ti", 11 * GB, 26.9 * TF, 616e9,  32e9,  16e9, 10 * DAY),
+    "RTX6000":   DeviceType("RTX6000",   24 * GB, 130 * TF, 672e9,   32e9,  16e9, 15 * DAY),
+    "RTX3090":   DeviceType("RTX3090",   24 * GB, 71 * TF,  936e9,   32e9,  16e9, 10 * DAY),
     # --- TPU adaptation (target hardware of this reproduction) ---
-    "v5e":       DeviceType("v5e",       16 * GB, 197 * TF, 819e9,   50e9,  25e9),
-    "v4":        DeviceType("v4",        32 * GB, 275 * TF, 1.2e12,  50e9,  25e9),
-    "v5p":       DeviceType("v5p",       95 * GB, 459 * TF, 2.76e12, 100e9, 25e9),
+    "v5e":       DeviceType("v5e",       16 * GB, 197 * TF, 819e9,   50e9,  25e9, 45 * DAY),
+    "v4":        DeviceType("v4",        32 * GB, 275 * TF, 1.2e12,  50e9,  25e9, 45 * DAY),
+    "v5p":       DeviceType("v5p",       95 * GB, 459 * TF, 2.76e12, 100e9, 25e9, 45 * DAY),
 }
 
 # Roofline constants for the production mesh (v5e pod) — system prompt spec.

@@ -15,9 +15,18 @@ Typed event set
                 released and queued jobs are re-admitted FIFO.
 ``node_join``   a node (re)joins: capacity grows, admission re-runs when the
                 exact ``min_devices`` gate passes, demoted jobs may migrate.
-``node_leave``  a node departs: jobs touching it are checkpointed
-                (progress accrued) and requeued with their remaining work;
-                the node leaves the indexed pool.
+``node_leave``  a node departs *gracefully*: jobs touching it are
+                checkpointed (progress accrued) and requeued with their
+                remaining work; the node leaves the indexed pool.
+``node_fail``   a node crash-faults (PR 8): victims are rolled back to
+                their last *durable* periodic checkpoint — progress since
+                it is lost (``lost_work_s``) — and restart under an
+                exponential-backoff budget (``max_restarts`` across every
+                cause).  Serve jobs that only lose part of their replica
+                group stay up degraded and refill through the serve
+                backlog.  The node leaves the pool abruptly.
+``restart``     a crashed job's backoff expired: it re-enters the queue
+                with preemption priority and admission re-runs.
 ``reschedule``  explicit trigger: re-run admission + the elastic scan.
 ``request_rate_change``  (serve jobs) the offered request rate moved; the
                 SLO autoscaler recomputes the replica target from the p95
@@ -64,6 +73,25 @@ replica group meets the job's target; ``gpu_seconds`` accrues
 ``replicas x plan.n_devices`` over the same segments.  Jobs with
 ``autoscale=False`` pin ``static_replicas`` (the benchmark baseline).
 
+Failure contract (PR 8)
+-----------------------
+``node_leave`` stays the *graceful* departure: zero lost work.  A
+``node_fail`` is abrupt: each victim keeps only the progress its periodic
+checkpoints made durable.  With ``ckpt_policy`` enabled every non-serve
+job checkpoints every ``tau`` seconds (per-job ``ckpt_interval_s``
+override, else Young–Daly ``sqrt(2*C*MTBF_agg)`` from the per-DeviceType
+MTBF catalog, else the fixed interval), stalling ``C =
+ckpt.checkpoint_seconds(cfg)`` per save — folded into an *effective* rate
+``rate * tau/(tau+C)`` so finish predictions, elastic comparisons, and
+accrual all price the overhead consistently.  On a crash the job rolls
+back to its last completed cycle boundary; with no policy it rolls back
+to its last graceful checkpoint event (possibly the start).  Crashed jobs
+restart after a deterministic exponential backoff with per-(job, attempt)
+jitter, sharing one ``max_restarts`` budget with the OOM retry loop.
+Everything here is opt-in: with no ``node_fail`` events and no checkpoint
+policy, every new code path is dormant and the engine is bit-identical to
+the PR 7 behavior (golden-tested).
+
 Static-cluster guarantee: with ``elastic=False`` and no node events, the
 engine's decisions are bit-identical to the seed event loop and the seed
 orchestrator (``tests/test_golden_equivalence.py``) — stale-event epochs,
@@ -74,7 +102,9 @@ runs never touch it.
 from __future__ import annotations
 
 import heapq
+import math
 import os
+import random
 import time
 from bisect import bisect_left, insort
 from collections import deque
@@ -85,6 +115,7 @@ from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
                     Sequence, Set, Tuple, Union)
 
 from repro.core import memtrace
+from repro.core.devices import DEVICE_TYPES
 from repro.core.has import Allocation, ClusterPool, Node
 from repro.core.marp import (ResourcePlan, default_ttft_slo,
                              p95_token_latency, prefill_service_seconds,
@@ -95,11 +126,13 @@ ARRIVE = "arrive"
 FINISH = "finish"
 NODE_JOIN = "node_join"
 NODE_LEAVE = "node_leave"
+NODE_FAIL = "node_fail"
 RESCHEDULE = "reschedule"
 OOM = "oom"
 RATE_CHANGE = "request_rate_change"
 SCALE_UP = "scale_up"
 SCALE_DOWN = "scale_down"
+RESTART = "restart"
 
 #: bytes/s assumed for checkpoint save+restore during migration/preemption
 DEFAULT_MIGRATION_BANDWIDTH = 16 * 2 ** 30
@@ -127,7 +160,7 @@ class Job:
     plan_mode: str = "exact"                # memory model the plans used
     requested_n: int = 0                    # user-specified count (baselines)
     # lifecycle state
-    state: str = "queued"                   # queued | running | done | failed
+    state: str = "queued"       # queued | running | backoff | done | failed
     start_time: float = -1.0                # first admission (queue_time base)
     finish_time: float = -1.0
     placements: Tuple[Tuple[str, int], ...] = ()
@@ -142,7 +175,18 @@ class Job:
                                             # stale finish events are dropped
     preemptions: int = 0
     migrations: int = 0
-    ooms: int = 0                           # OOM kills of this job
+    #: per-cause restart ledger ("oom" kills, "crash" node-faults) — one
+    #: combined budget: an OOM-then-crash job cannot exceed ``max_restarts``
+    #: across causes.  Read ``ooms`` / ``total_restarts`` for the counts.
+    restarts: Dict[str, int] = field(default_factory=dict)
+    # failure-plane state (PR 8; all dormant — zero — unless node_fail
+    # events arrive or a checkpoint policy is enabled)
+    ckpt_interval_s: float = 0.0            # per-job override; 0 = policy
+    ckpt_cost_s: float = 0.0                # seconds one durable save stalls
+    lost_work_s: float = 0.0                # progress rolled back by crashes
+    ckpt_overhead_s: float = 0.0            # run time spent saving state
+    replica_fails: int = 0                  # serve replicas lost to faults
+    _ckpt_tau: float = field(default=0.0, repr=False)  # active interval
     # fine-tune state (kind == "finetune"): LoRA adapters train a tiny
     # parameter set, so the serialized training state — and with it every
     # checkpoint, preemption restart, and migration — is near-free
@@ -187,6 +231,19 @@ class Job:
     #: replaced by the OOM replan path) — the admission queue reads it on
     #: every insert/remove, which is hot at 1M-job scale
     _min_dev: int = field(default=0, repr=False)
+
+    @property
+    def ooms(self) -> int:
+        """OOM kills of this job (the "oom" row of the restart ledger)."""
+        return self.restarts.get("oom", 0)
+
+    @property
+    def total_restarts(self) -> int:
+        """Restarts across every cause — what the combined budget gates."""
+        return sum(self.restarts.values())
+
+    def record_restart(self, cause: str) -> None:
+        self.restarts[cause] = self.restarts.get(cause, 0) + 1
 
     @property
     def slo_attainment(self) -> float:
@@ -762,6 +819,10 @@ class LifecycleEngine:
                  oom_detect_seconds: float = DEFAULT_OOM_DETECT_SECONDS,
                  max_oom_retries: int = 8,
                  scale_up_delay: float = DEFAULT_SCALE_UP_DELAY,
+                 ckpt_policy: Optional[str] = None,
+                 ckpt_fixed_interval_s: float = 0.0,
+                 restart_backoff_s: float = 0.0,
+                 max_restarts: Optional[int] = None,
                  retain_jobs: bool = True,
                  on_complete: Optional[Callable[[Job], None]] = None,
                  reset: bool = False):
@@ -780,6 +841,20 @@ class LifecycleEngine:
         self.oom_detect_seconds = oom_detect_seconds
         self.max_oom_retries = max_oom_retries
         self.scale_up_delay = scale_up_delay
+        # failure plane (PR 8): periodic-checkpoint policy + restart budget.
+        # ``ckpt_policy``: None (no periodic checkpoints — crashes roll back
+        # to the last graceful event), "young_daly" (per-placement optimal
+        # interval), or "fixed" (``ckpt_fixed_interval_s`` for every job).
+        # ``max_restarts`` is the combined budget across OOM + crash causes
+        # and defaults to ``max_oom_retries`` so OOM-only runs are
+        # unchanged.  ``restart_backoff_s`` (0 = restart hot) is the base
+        # of the deterministic exponential backoff crashed jobs wait out.
+        assert ckpt_policy in (None, "young_daly", "fixed"), ckpt_policy
+        self.ckpt_policy = ckpt_policy
+        self.ckpt_fixed_interval_s = ckpt_fixed_interval_s
+        self.restart_backoff_s = restart_backoff_s
+        self.max_restarts = max_oom_retries if max_restarts is None \
+            else max_restarts
         #: streaming-scale knobs: with ``retain_jobs=False`` a job leaving
         #: the system (done/failed) is dropped from ``self.jobs`` after
         #: ``on_complete`` sees it, so a 1M-job run holds only live jobs
@@ -791,11 +866,16 @@ class LifecycleEngine:
         self._events: List[tuple] = []      # (time, seq, kind, payload, epoch)
         self._seq = 0
         self._offline: Dict[str, Node] = {}   # departed nodes, by id
-        self._node_jobs: Dict[str, Set[int]] = {}   # node -> running job ids
+        # node -> {running job id -> number of placement entries on that
+        # node}.  Refcounted so serve replica churn can (un)register only
+        # the replicas that changed, and so ``node_leave``/``node_fail``
+        # collect victims in O(victims) instead of scanning running jobs.
+        self._node_jobs: Dict[str, Dict[int, int]] = {}
         # jobs running below their top-ranked plan: id -> fewest devices any
         # better-ranked plan needs (the elastic scan's capacity gate)
         self._demoted = SortedIdDict()
         self._mig_cost: Dict[object, float] = {}
+        self._save_cost: Dict[object, float] = {}   # one durable save, by cfg
         # counters
         self.sched_time_s = 0.0
         self.sched_calls = 0
@@ -813,6 +893,17 @@ class LifecycleEngine:
         self.oom_failures = 0               # jobs abandoned after retries
         #: per-OOM telemetry: (time, job_id, device_type, pred, observed)
         self.oom_log: List[Tuple[float, int, str, float, float]] = []
+        # failure-plane telemetry (pure accumulation — never consulted by
+        # any decision, per the telemetry-is-free invariant)
+        self.node_fail_count = 0            # abrupt node crash-faults
+        self.crash_count = 0                # job crashes (victims of faults)
+        self.crash_failures = 0             # jobs abandoned over the budget
+        self.replica_fail_count = 0         # serve replicas lost to faults
+        self.lost_work_s = 0.0              # compute rolled back by crashes
+        self.ckpt_overhead_s = 0.0          # run time spent saving state
+        self.useful_work_s = 0.0            # durable non-serve compute
+        #: per-victim crash log: (time, node_id, job_id, lost_work_s)
+        self.failure_log: List[Tuple[float, str, int, float]] = []
         self.makespan = 0.0
 
     # ------------------------------------------------------------ live API
@@ -893,8 +984,36 @@ class LifecycleEngine:
         for job in victims:
             self._preempt(job, now)
         self._offline[node_id] = self.pool.remove_node(node_id)
+        self._node_jobs.pop(node_id, None)  # drained by the preempts above
         if self._gate_open():
             self._run_scheduler(now, "churn")
+        self._maybe_migrate(now)
+        return victims
+
+    def node_fail(self, node_id: str, now: float = 0.0) -> List[Job]:
+        """``node_fail``: the node crash-faults.  Unlike ``node_leave``
+        there is no checkpoint-on-the-way-out: every train/finetune job
+        touching the node rolls back to its last *durable* checkpoint
+        (``_crash``), serve jobs lose exactly the replicas placed on the
+        node and stay up degraded when any replica survives.  Returns the
+        fully-crashed victims (sorted by id)."""
+        if node_id not in self.pool.nodes:
+            return []                       # already gone: ignore
+        self.node_fail_count += 1
+        victims: List[Job] = []
+        for jid in sorted(self._node_jobs.get(node_id, {})):
+            job = self.jobs[jid]
+            if job.kind == "serve" \
+                    and self._fail_serve_replicas(job, node_id, now):
+                self.failure_log.append((now, node_id, jid, 0.0))
+                continue                    # partial loss: job survives
+            lost = self._crash(job, now)
+            self.failure_log.append((now, node_id, jid, lost))
+            victims.append(job)
+        self._offline[node_id] = self.pool.remove_node(node_id)
+        self._node_jobs.pop(node_id, None)  # drained by the crashes above
+        if self._gate_open():
+            self._run_scheduler(now, "fail")
         self._maybe_migrate(now)
         return victims
 
@@ -1073,6 +1192,17 @@ class LifecycleEngine:
             self.node_join(payload.node, payload.node_id, now)
         elif kind == NODE_LEAVE:
             self.node_leave(payload.node_id, now)
+        elif kind == NODE_FAIL:
+            self.node_fail(payload.node_id, now)
+        elif kind == RESTART:
+            job = payload
+            if epoch != job.epoch or job.state != "backoff":
+                return                      # stale: job moved on already
+            self.makespan = max(self.makespan, now)
+            job.state = "queued"
+            self.queued.append(job)
+            if self._gate_open():
+                self._run_scheduler(now, "restart")
         elif kind == RESCHEDULE:
             self.reschedule(now)
         else:
@@ -1154,7 +1284,11 @@ class LifecycleEngine:
             job.start_time = start
         self._register(job)
         if self.rate_fn is not None:
-            job.rate = self.rate_fn(job, job.placements, d, t)
+            raw = self.rate_fn(job, job.placements, d, t)
+            # checkpoint policy (no-op raw rate when off): progress stalls
+            # for one save per interval, so the *effective* rate prices it
+            job.rate, job._ckpt_tau, job.ckpt_cost_s = \
+                self._effective_rate(job, raw, job.placements)
             # preempted jobs resume from their checkpoint: restore cost first
             resume = start + (self._migration_seconds(job)
                               if job.preemptions else 0.0)
@@ -1182,6 +1316,9 @@ class LifecycleEngine:
         self._track_demotion(job)
 
     def _finish(self, job: Job, now: float) -> None:
+        if job.rate > 0.0 and now > job.progress_time:
+            self._charge_work(job, now - job.progress_time)
+            job.progress_time = now
         self._serve_teardown(job, now)
         self.pool.release(job.placements)
         self._unregister(job)
@@ -1214,7 +1351,7 @@ class LifecycleEngine:
         """
         plan = job.plan
         self.oom_count += 1
-        job.ooms += 1
+        job.record_restart("oom")
         self.oom_log.append((now, job.job_id,
                              plan.device_type if plan else "",
                              float(plan.pred_bytes) if plan else 0.0,
@@ -1234,7 +1371,10 @@ class LifecycleEngine:
         job.plan = None
         job.plan_rank = -1
         self._demoted.pop(job.job_id, None)
-        if job.ooms > self.max_oom_retries:
+        # one combined budget across causes: an OOM-then-crash job cannot
+        # spend ``max_restarts`` twice (equals ``max_oom_retries`` unless
+        # overridden, so OOM-only runs are unchanged)
+        if job.total_restarts > self.max_restarts:
             job.state = "failed"            # crash-looping: stop retrying
             self.oom_failures += 1
         else:
@@ -1249,7 +1389,18 @@ class LifecycleEngine:
                     job.state = "failed"
                     self.oom_failures += 1
         if job.state == "queued":
-            self.queued.append(job)
+            # with a backoff base configured, OOM restarts wait it out too
+            # (same combined escalation as crash restarts); the 0.0 default
+            # keeps the immediate-requeue path
+            delay = self._backoff_delay(job)
+            if delay > 0.0 and self.rate_fn is not None:
+                job.state = "backoff"
+                self._seq += 1
+                heapq.heappush(self._events,
+                               (now + delay, self._seq, RESTART, job,
+                                job.epoch))
+            else:
+                self.queued.append(job)
         else:
             self._completed(job)
         # the released capacity may admit queued work (incl. this job)
@@ -1309,11 +1460,16 @@ class LifecycleEngine:
             placements = self.pool.find_placements(best)
             if placements is None:
                 continue
-            new_rate = self.rate_fn(job, placements, best.d, best.t)
+            new_raw = self.rate_fn(job, placements, best.d, best.t)
+            # compare effective rates: the candidate placement may carry a
+            # different checkpoint interval (different device MTBF)
+            new_rate, new_tau, new_cost = \
+                self._effective_rate(job, new_raw, placements)
             if new_rate <= job.rate:
                 continue
             mig = self._migration_seconds(job)
-            done = job.samples_done + max(now - job.progress_time, 0.0) * job.rate
+            dt_run = max(now - job.progress_time, 0.0)
+            done = job.samples_done + dt_run * job.rate
             done = min(done, float(job.total_samples))
             new_finish = now + mig + (job.total_samples - done) / new_rate
             # a doomed placement (finish_time = -1, OOM pending) has an
@@ -1326,6 +1482,8 @@ class LifecycleEngine:
             self.pool.apply(placements)
             self.pool.release(job.placements)
             self._unregister(job)
+            if dt_run > 0.0:                # telemetry for the old segment
+                self._charge_work(job, dt_run)
             job.samples_done = done
             job.progress_time = now + mig
             job.placements = tuple(placements)
@@ -1333,6 +1491,7 @@ class LifecycleEngine:
             _record_plan(job, best, placements)
             job.plan_rank = rank
             job.rate = new_rate
+            job._ckpt_tau, job.ckpt_cost_s = new_tau, new_cost
             job.epoch += 1                  # stale the old finish event
             job.migrations += 1
             self.migration_count += 1
@@ -1489,6 +1648,7 @@ class LifecycleEngine:
                 break                       # capacity tight; SLO will show it
             self.pool.apply(placements)
             job.replica_placements.append(tuple(placements))
+            self._register_placements(job.job_id, placements)
             job.serve_replicas += 1
             job.scale_ups += 1
             self.scale_up_count += 1
@@ -1497,6 +1657,7 @@ class LifecycleEngine:
         while job.serve_replicas > target:
             replica = job.replica_placements.pop()
             self.pool.release(replica)
+            self._unregister_placements(job.job_id, replica)
             job.serve_replicas -= 1
             job.scale_downs += 1
             self.scale_down_count += 1
@@ -1511,6 +1672,7 @@ class LifecycleEngine:
                 break                       # capacity tight; TTFT will show it
             self.pool.apply(placements)
             job.prefill_placements.append(tuple(placements))
+            self._register_placements(job.job_id, placements)
             job.prefill_replicas += 1
             job.scale_ups += 1
             self.scale_up_count += 1
@@ -1518,16 +1680,18 @@ class LifecycleEngine:
         while job.prefill_replicas > pf_target:
             replica = job.prefill_placements.pop()
             self.pool.release(replica)
+            self._unregister_placements(job.job_id, replica)
             job.prefill_replicas -= 1
             job.scale_downs += 1
             self.scale_down_count += 1
             changed = released = True
         if changed:
-            self._unregister(job)
+            # the refcounted index was updated per replica above; only the
+            # flattened union needs rebuilding (O(changed replicas) index
+            # work instead of re-registering the whole group)
             job.placements = tuple(p for rep in job.replica_placements
                                    for p in rep) \
                 + tuple(p for rep in job.prefill_placements for p in rep)
-            self._register(job)
         if job.serve_replicas < target or job.prefill_replicas < pf_target:
             self._serve_backlog.add(job.job_id)
         else:
@@ -1613,20 +1777,229 @@ class LifecycleEngine:
             self._demoted.pop(job.job_id, None)
 
     def _accrue(self, job: Job, now: float) -> None:
-        """Fold compute since the last checkpoint into ``samples_done``."""
+        """Fold compute since the last checkpoint into ``samples_done``
+        (*graceful* accrual: node_leave preemption, OOM, rate changes —
+        the departing runtime saves state on the way out, zero lost
+        work)."""
         if job.rate > 0.0 and now > job.progress_time:
-            job.samples_done = min(
-                job.samples_done + (now - job.progress_time) * job.rate,
-                float(job.total_samples))
+            dt = now - job.progress_time
+            job.samples_done = min(job.samples_done + dt * job.rate,
+                                   float(job.total_samples))
+            self._charge_work(job, dt)
         job.progress_time = now
 
+    def _charge_work(self, job: Job, dt: float) -> None:
+        """Telemetry split of a run segment into useful compute vs
+        checkpoint-save stall (pure accumulation — never read back by any
+        decision).  With no checkpoint policy the whole segment is
+        useful."""
+        tau, cost = job._ckpt_tau, job.ckpt_cost_s
+        if tau > 0.0:
+            ov = dt * cost / (tau + cost)
+            job.ckpt_overhead_s += ov
+            self.ckpt_overhead_s += ov
+            dt -= ov
+        if job.kind != "serve":
+            self.useful_work_s += dt
+
+    def _accrue_crash(self, job: Job, now: float) -> float:
+        """Crash accrual: only *durable* progress survives.  Under a
+        periodic-checkpoint interval ``tau`` the job completed
+        ``k = floor(elapsed / (tau + C))`` save cycles — those samples are
+        kept; the partial cycle in flight is lost.  With no interval,
+        everything since the last graceful checkpoint is lost.  Returns
+        the lost seconds (telemetry)."""
+        dt = now - job.progress_time
+        lost = 0.0
+        if job.rate > 0.0 and dt > 0.0:
+            tau, cost = job._ckpt_tau, job.ckpt_cost_s
+            if tau > 0.0:
+                cycle = tau + cost
+                k = int(dt // cycle)
+                job.samples_done = min(
+                    job.samples_done + k * cycle * job.rate,
+                    float(job.total_samples))
+                lost = dt - k * cycle
+                job.ckpt_overhead_s += k * cost
+                self.ckpt_overhead_s += k * cost
+                self.useful_work_s += k * tau
+            else:
+                lost = dt
+            job.lost_work_s += lost
+            self.lost_work_s += lost
+        job.progress_time = now
+        return lost
+
+    def _crash(self, job: Job, now: float) -> float:
+        """A running job lost its placement to a node fault: roll back to
+        the last durable checkpoint, then restart via deterministic
+        exponential backoff — or abandon it once the combined restart
+        budget is spent.  Returns the lost seconds."""
+        if job.kind == "serve":
+            # a serve job's "progress" is wall-clock serving time already
+            # delivered — there is nothing to roll back; the SLO ledger
+            # records the outage instead
+            lost = 0.0
+            self._accrue(job, now)
+        else:
+            lost = self._accrue_crash(job, now)
+        self._serve_teardown(job, now)
+        self.pool.release(job.placements)
+        self._unregister(job)
+        job.placements = ()
+        job.rate = 0.0
+        job.finish_time = -1.0
+        job.epoch += 1                      # stale any in-flight events
+        job.allocation = None
+        job.plan = None
+        job.plan_rank = -1
+        self._demoted.pop(job.job_id, None)
+        job.record_restart("crash")
+        self.crash_count += 1
+        if job.total_restarts > self.max_restarts:
+            job.state = "failed"            # budget spent: stop retrying
+            self.crash_failures += 1
+            self._completed(job)
+            return lost
+        job.preemptions += 1                # checkpoint-restart priority
+        delay = self._backoff_delay(job)
+        if delay > 0.0 and self.rate_fn is not None:
+            job.state = "backoff"
+            self._seq += 1
+            heapq.heappush(self._events,
+                           (now + delay, self._seq, RESTART, job, job.epoch))
+        else:
+            job.state = "queued"
+            self.queued.append(job)
+        return lost
+
+    def _backoff_delay(self, job: Job) -> float:
+        """Deterministic exponential backoff with deterministic jitter:
+        ``base * 2^(n-1) * (1 + U[0, 0.25))`` for the job's n-th restart,
+        where U is drawn from a generator seeded by (job id, n) — the
+        same restart of the same job always waits the same time, and two
+        jobs crashed by one fault wave fan out instead of stampeding."""
+        if self.restart_backoff_s <= 0.0:
+            return 0.0
+        n = max(job.total_restarts, 1)
+        jitter = random.Random(
+            f"backoff|{job.job_id}|{n}").uniform(0.0, 0.25)
+        return self.restart_backoff_s * (2.0 ** (min(n, 10) - 1)) \
+            * (1.0 + jitter)
+
+    def _fail_serve_replicas(self, job: Job, node_id: str,
+                             now: float) -> bool:
+        """Partial serve failure: drop exactly the decode/prefill replicas
+        placed on the failed node; the survivors keep serving degraded.
+        Returns False when no decode replica survives — the caller crashes
+        the whole job instead.  The SLO segment is closed at the fault, so
+        the dead-replica window is honestly accounted at the reduced
+        capacity until the backlog refills the group."""
+        dead = [rep for rep in job.replica_placements
+                if any(nid == node_id for nid, _ in rep)]
+        if len(dead) >= len(job.replica_placements):
+            return False                    # whole decode pool died
+        self._account_serve(job, now)       # close the pre-fault segment
+        for rep in dead:
+            job.replica_placements.remove(rep)
+            self.pool.release(rep)
+            self._unregister_placements(job.job_id, rep)
+            job.serve_replicas -= 1
+            job.replica_fails += 1
+            self.replica_fail_count += 1
+        for rep in [rep for rep in job.prefill_placements
+                    if any(nid == node_id for nid, _ in rep)]:
+            job.prefill_placements.remove(rep)
+            self.pool.release(rep)
+            self._unregister_placements(job.job_id, rep)
+            job.prefill_replicas -= 1
+            job.replica_fails += 1
+            self.replica_fail_count += 1
+        job.placements = tuple(p for rep in job.replica_placements
+                               for p in rep) \
+            + tuple(p for rep in job.prefill_placements for p in rep)
+        # replacement replicas ride the normal provisioning path: parked on
+        # the backlog and re-scaled after ``scale_up_delay`` (sim) or on
+        # the next capacity event (live)
+        self._serve_backlog.add(job.job_id)
+        if self.rate_fn is not None:
+            self._seq += 1
+            heapq.heappush(self._events,
+                           (now + self.scale_up_delay, self._seq, SCALE_UP,
+                            job, job.epoch))
+        return True
+
+    def _effective_rate(self, job: Job, raw: float, placements
+                        ) -> Tuple[float, float, float]:
+        """Resolve the periodic-checkpoint interval for this (job,
+        placement) and fold the save stall into the rate:
+        ``(raw * tau/(tau+C), tau, C)``.  Resolution order: per-job
+        ``ckpt_interval_s`` override, else the engine policy — Young–Daly
+        ``sqrt(2*C*MTBF_agg)`` with the aggregate MTBF of the placement's
+        devices, or the fixed interval.  Returns ``(raw, 0, 0)`` untouched
+        when checkpointing is off (the bit-identity path) or for serve
+        jobs (replicas hold no training state)."""
+        if (self.ckpt_policy is None and job.ckpt_interval_s <= 0.0) \
+                or job.kind == "serve" or job.cfg is None or raw <= 0.0:
+            return raw, 0.0, 0.0
+        cost = self._checkpoint_cost(job)
+        if cost <= 0.0:
+            return raw, 0.0, 0.0
+        if job.ckpt_interval_s > 0.0:
+            tau = job.ckpt_interval_s
+        elif self.ckpt_policy == "fixed":
+            tau = self.ckpt_fixed_interval_s
+        else:                               # young_daly
+            hazard = 0.0
+            for nid, k in placements:
+                node = self.pool.nodes[nid]
+                dev = DEVICE_TYPES[node.device_type]
+                hazard += k / dev.mtbf_s
+            if hazard <= 0.0:
+                return raw, 0.0, 0.0
+            tau = math.sqrt(2.0 * cost / hazard)
+        if tau <= 0.0:
+            return raw, 0.0, 0.0
+        tau = max(tau, cost)                # an interval under C is absurd
+        return raw * tau / (tau + cost), tau, cost
+
+    def _checkpoint_cost(self, job: Job) -> float:
+        """Seconds one durable save stalls the job (cached per config —
+        LoRA finetunes save only adapters, near-free)."""
+        if job.cfg is None:
+            return 0.0
+        rank = job.lora_rank if job.kind == "finetune" else 0
+        key = (job.cfg, rank)
+        cost = self._save_cost.get(key)
+        if cost is None:
+            from repro.ckpt.checkpoint import checkpoint_seconds
+            cost = checkpoint_seconds(job.cfg,
+                                      bandwidth=self.migration_bandwidth,
+                                      lora_rank=rank)
+            self._save_cost[key] = cost
+        return cost
+
     def _register(self, job: Job) -> None:
-        for nid, _ in job.placements:
-            self._node_jobs.setdefault(nid, set()).add(job.job_id)
+        self._register_placements(job.job_id, job.placements)
 
     def _unregister(self, job: Job) -> None:
-        for nid, _ in job.placements:
-            ids = self._node_jobs.get(nid)
-            if ids is not None:
-                ids.discard(job.job_id)
+        self._unregister_placements(job.job_id, job.placements)
+
+    def _register_placements(self, job_id: int, placements) -> None:
+        """Refcount placement entries into the node -> jobs index — serve
+        replica churn registers only the replicas that changed."""
+        for nid, _ in placements:
+            per_node = self._node_jobs.setdefault(nid, {})
+            per_node[job_id] = per_node.get(job_id, 0) + 1
+
+    def _unregister_placements(self, job_id: int, placements) -> None:
+        for nid, _ in placements:
+            per_node = self._node_jobs.get(nid)
+            if per_node is None:
+                continue
+            left = per_node.get(job_id, 0) - 1
+            if left > 0:
+                per_node[job_id] = left
+            else:
+                per_node.pop(job_id, None)
 

@@ -22,6 +22,7 @@ from repro.configs.base import ModelConfig
 from repro.core import calibration
 from repro.core import memory_model as mm
 from repro.core import memtrace
+from repro.core import reliability
 from repro.core.devices import DEVICE_TYPES, DeviceType
 
 
@@ -115,8 +116,10 @@ def predict_plans(cfg: ModelConfig, global_batch: int, seq: int, *,
     model configs, so in the scheduling hot path this is almost always a
     cache hit.  The calibration token invalidates cached rankings whenever
     the MFU table is (re-)enabled, the memtrace token whenever the memory
-    feedback plane ingests an observation or is (re-)enabled; with both off
-    the tokens are constant and the ranking is the seed's.
+    feedback plane ingests an observation or is (re-)enabled, and the
+    reliability token whenever reliability-aware planning is (re-)enabled
+    (PR 8); with all three off the tokens are constant and the ranking is
+    the seed's.
     ``ResourcePlan`` is frozen, so cached plans are shared safely; the list
     itself is fresh per call so callers may sort/slice it.
     """
@@ -124,7 +127,8 @@ def predict_plans(cfg: ModelConfig, global_batch: int, seq: int, *,
     return list(_predict_plans_cached(cfg, global_batch, seq, dts,
                                       max_devices, zero, mode, max_t,
                                       calibration.cache_token(),
-                                      memtrace.cache_token()))
+                                      memtrace.cache_token(),
+                                      reliability.cache_token()))
 
 
 def predict_plans_shared(cfg: ModelConfig, global_batch: int, seq: int, *,
@@ -141,7 +145,8 @@ def predict_plans_shared(cfg: ModelConfig, global_batch: int, seq: int, *,
     return _predict_plans_cached(cfg, global_batch, seq, dts,
                                  max_devices, zero, mode, max_t,
                                  calibration.cache_token(),
-                                 memtrace.cache_token())
+                                 memtrace.cache_token(),
+                                 reliability.cache_token())
 
 
 @lru_cache(maxsize=4096)
@@ -149,7 +154,8 @@ def _predict_plans_cached(cfg: ModelConfig, global_batch: int, seq: int,
                           device_types: Tuple[str, ...], max_devices: int,
                           zero: int, mode: str, max_t: int,
                           cal_token: Tuple = ("off",),
-                          mem_token: Tuple = ("off",)
+                          mem_token: Tuple = ("off",),
+                          rel_token: Tuple = ("off",)
                           ) -> Tuple[ResourcePlan, ...]:
     plans: List[ResourcePlan] = []
     d_candidates = [x for x in _pow2_divisors(global_batch) if x <= max_devices]
@@ -174,6 +180,13 @@ def _predict_plans_cached(cfg: ModelConfig, global_batch: int, seq: int,
                 if adj < cap:
                     score = plan_throughput_score(cfg, dev, d, t,
                                                   global_batch, seq)
+                    if reliability.is_enabled():
+                        # price the failure plane: a big plan on flaky
+                        # hardware loses durable goodput to rollbacks and
+                        # checkpoint stalls, and can rank below a smaller
+                        # or more reliable one (PR 8)
+                        score *= reliability.expected_goodput(
+                            cfg, dt_name, d * t, lora_rank=0)
                     plans.append(ResourcePlan(
                         n_devices=d * t, min_mem=int(adj / margin) + 1,
                         d=d, t=t, device_type=dt_name, pred_bytes=pred,

@@ -147,6 +147,14 @@ class Orchestrator:
         Returns the preempted jobs."""
         return self.engine.node_leave(node_id, now=float(next(self._clock)))
 
+    def node_fail(self, node_id: str) -> List[Job]:
+        """A node crash-faulted (abrupt — no checkpoint on the way out):
+        victims roll back to their last durable checkpoint and restart
+        under the engine's combined restart budget; serve jobs losing only
+        part of their replica group stay up degraded.  Returns the
+        fully-crashed jobs."""
+        return self.engine.node_fail(node_id, now=float(next(self._clock)))
+
 
 def make_cluster(spec: Sequence[tuple]) -> List[Node]:
     """spec: [(count, devices_per_node, device_type), ...] -> Node list."""

@@ -591,6 +591,64 @@ def test_simulation_serve_free_identical_after_serve_run():
         assert g.rate == w.rate, w.job_id
 
 
+def test_predict_plans_reliability_round_trip_stays_golden():
+    """Reliability-aware planning (PR 8) enable/disable cycles must leave
+    the reliability-off ranking (and the shared memoized tuple identity)
+    bit-identical to the seed — the reliability token keeps discounted
+    scores out of the shared plan cache."""
+    from repro.core import reliability
+    from repro.core.marp import predict_plans_shared
+    reliability.disable()
+    cfg = ARCHS["gpt2-7b"]
+    kw = dict(device_types=["A100-40G", "A100-80G", "RTX3090"])
+    base = predict_plans(cfg, 32, 1024, **kw)
+    shared = predict_plans_shared(cfg, 32, 1024, **kw)
+    reliability.enable(mtbf_scale=1e-4)     # absurdly flaky fleet
+    try:
+        discounted = predict_plans(cfg, 32, 1024, **kw)
+        assert discounted != base           # scores (at least) moved
+        # the discount grows with device count: n-device aggregate hazard
+        g_big = reliability.expected_goodput(cfg, "A100-80G", 64)
+        g_small = reliability.expected_goodput(cfg, "A100-80G", 8)
+        assert g_big < g_small < 1.0
+    finally:
+        reliability.disable()
+    assert predict_plans(cfg, 32, 1024, **kw) == base
+    assert predict_plans_shared(cfg, 32, 1024, **kw) is shared
+    reliability.reset()
+
+
+def test_simulation_failure_free_identical_after_failure_run():
+    """The failure plane is additive: a full failure-plane simulation
+    (node_fail events, Young–Daly checkpointing, backoff restarts) must
+    leave a subsequent fault-free, feature-off simulation bit-identical
+    to the seed event loop — no state may leak through the pool, the
+    scheduler, or the plan cache."""
+    from repro.cluster.traces import failure_schedule, scale_workload
+    nodes = make_cluster(PAPER_SIM_CLUSTER)
+    types = sorted({n.device_type for n in nodes})
+    want = _seed_simulate(new_workload(30, types, seed=13),
+                          copy.deepcopy(nodes))
+    fjobs = scale_workload(120, types, seed=5, mean_interarrival=2.0,
+                           mean_minutes=20.0)
+    fails = failure_schedule(nodes, horizon=2400.0, seed=3,
+                             mtbf_scale=0.02)
+    assert any(e.kind == "node_fail" for e in fails)
+    fres = simulate(fjobs, copy.deepcopy(nodes), FrenzyScheduler(),
+                    charge_overhead=False, cluster_events=fails,
+                    ckpt_policy="young_daly", restart_backoff_s=15.0)
+    assert fres.crashes > 0                 # the failure plane actually ran
+    got = simulate(new_workload(30, types, seed=13), copy.deepcopy(nodes),
+                   FrenzyScheduler(), charge_overhead=False)
+    assert got.lost_work_s == 0.0 and got.ckpt_overhead_s == 0.0
+    for w, g in zip(sorted(want, key=lambda j: j.job_id),
+                    sorted(got.jobs, key=lambda j: j.job_id)):
+        assert g.placements == w.placements, w.job_id
+        assert g.start_time == w.start_time, w.job_id
+        assert g.finish_time == w.finish_time, w.job_id
+        assert g.rate == w.rate, w.job_id
+
+
 def test_predict_serve_plans_decode_table_round_trip_stays_golden():
     """The serve rate-model refactor routes bandwidth through
     ``calibration.decode_bw_for``: with the decode table off the sweep
