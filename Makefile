@@ -20,12 +20,16 @@
 #   make failure-smoke  failure plane end-to-end smoke: the checkpoint-
 #                     policy quick cell + the backoff storm, then the
 #                     failure-plane test file
+#   make obs-smoke    observability plane round trip: churn+OOM sim with
+#                     obs on -> Chrome-trace + metrics export -> re-read
+#                     -> report (fails if any section comes back empty),
+#                     then the obs/telemetry test files
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 tier1-fast bench-smoke bench bench-json bench-compare \
-	memcheck serve-smoke failure-smoke
+	memcheck serve-smoke failure-smoke obs-smoke
 
 tier1:
 	$(PY) -m pytest -x -q
@@ -66,3 +70,8 @@ serve-smoke:
 failure-smoke:
 	$(PY) -m benchmarks.failure_resilience --quick
 	$(PY) -m pytest -x -q tests/test_failure_plane.py
+
+obs-smoke:
+	$(PY) -m repro.obs.report --demo
+	$(PY) -m pytest -x -q tests/test_obs.py tests/test_sched_telemetry.py \
+		tests/test_golden_equivalence.py

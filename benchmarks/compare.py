@@ -13,10 +13,16 @@ Key rows and their direction are declared in ``KEY_RULES`` — scheduler
 overhead and kernel timings (lower ``us_per_call`` is better), JCT
 reductions / SLO attainment / GPU-savings / serving throughput (higher
 ``derived`` is better), and modeled p95 latency (lower is better).
+A ``max:<float>`` direction is an *absolute* ceiling on the fresh value,
+independent of the baseline — used for invariant rows like the
+observability overhead percentage, where "no worse than last time" is
+the wrong contract (the contract is "under 5%, period").
 Sub-millisecond timing rows are *skipped, loudly*: across CI machines
 they measure jitter, not regressions.  Rows present in only one file are
 reported but do not fail the gate (grids legitimately grow); a fresh run
-with ``failed_suites`` always fails.
+with ``failed_suites`` always fails.  Provenance drift between baseline
+and fresh (machine, git rev, python/jax versions) is printed as a note,
+never gated — it contextualizes timing deltas.
 """
 from __future__ import annotations
 
@@ -60,6 +66,16 @@ KEY_RULES: Tuple[Tuple[Callable[[str], bool], str, str], ...] = (
      "derived", "lower"),
     (lambda n: n.endswith("/abandoned_backoff"), "derived", "lower"),
     (lambda n: n.endswith("/abandon_reduction"), "derived", "higher"),
+    # observability plane: absolute ceiling on obs-on overhead (the
+    # telemetry-is-free contract), not baseline-relative.  The quick cell
+    # (~50ms windows) is relatively noisier, so its ceiling is looser —
+    # it catches order-of-magnitude regressions, the full cell holds the
+    # real 5% invariant.  Raw wall_s rows are informational.
+    (lambda n: n == "obs_overhead/n10000_j5000/overhead_pct",
+     "derived", "max:5"),
+    (lambda n: n == "obs_overhead/n1000_j1000/overhead_pct",
+     "derived", "max:10"),
+    (lambda n: n.startswith("obs_overhead/"), "derived", "skip"),
     (lambda n: n.startswith("serve_autoscale/") and "/slo_" in n,
      "derived", "higher"),
     (lambda n: n.endswith("/gpu_s_saving"), "derived", "higher"),
@@ -111,6 +127,20 @@ def compare(base: dict, fresh: dict, threshold: float
             continue                        # telemetry row, never gated
         if name not in frows:
             notes.append(f"key row only in baseline (not failing): {name}")
+            continue
+        if direction.startswith("max:"):
+            # absolute ceiling — gated even with no baseline row
+            ceiling = float(direction[4:])
+            f = _value(frows[name], metric)
+            if f is None:
+                notes.append(f"non-numeric key row skipped: {name}")
+            elif f > ceiling:
+                regressions.append(
+                    f"{name}: {metric} {f:.4g} exceeds absolute ceiling"
+                    f" {ceiling:g}")
+            else:
+                notes.append(f"ok: {name} {metric} {f:.4g}"
+                             f" <= ceiling {ceiling:g}")
             continue
         if name not in brows:
             notes.append(f"new key row (no baseline yet): {name}")
@@ -192,6 +222,15 @@ def main(argv=None) -> int:
         notes.append(f"backend differs: baseline {base.get('backend')}"
                      f" vs fresh {fresh.get('backend')} — timing rows are"
                      f" cross-machine, read with care")
+    bprov = base.get("provenance") or {}
+    fprov = fresh.get("provenance") or {}
+    for field in sorted(set(bprov) | set(fprov)):
+        bv, fv = bprov.get(field, "?"), fprov.get(field, "?")
+        if bv != fv:
+            # informational only: drift explains timing deltas, it is
+            # never itself a regression
+            notes.append(f"provenance drift [{field}]: baseline {bv}"
+                         f" vs fresh {fv}")
 
     print(f"compare: baseline {os.path.basename(baseline_path)}"
           f" ({len(base['rows'])} rows) vs fresh ({len(fresh['rows'])}"

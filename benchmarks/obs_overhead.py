@@ -1,0 +1,115 @@
+"""Observability overhead gate: obs-on vs obs-off wall time on the
+control-plane scale sim.
+
+The observability plane's contract is "telemetry is free": every hook is
+a single attribute check when disabled, and an amortized ring-buffer
+append when enabled.  This benchmark prices both sides on the
+``sched_scale`` 10k-node x 5k-job cell (quick: 1k x 1k) under node churn
+and memory mispredictions — the densest event mix the engine runs — and
+reports the relative delta as ``overhead_pct``, gated at an absolute 5%
+ceiling by ``compare.py`` (direction ``max:5``).
+
+Rows:
+    obs_overhead/n{N}_j{J}/wall_s_off   obs-off lower-quartile wall
+    obs_overhead/n{N}_j{J}/wall_s_on    obs-on lower-quartile wall
+    obs_overhead/n{N}_j{J}/overhead_pct 100 * (on/off - 1), quartile ratio
+
+    PYTHONPATH=src python -m benchmarks.obs_overhead [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import statistics
+import time
+
+from benchmarks.sched_scale import make_scaled_cluster
+from repro import obs
+from repro.cluster.schedulers import FrenzyScheduler
+from repro.cluster.simulator import simulate
+from repro.cluster.traces import (churn_schedule, misprediction_oracle,
+                                  scale_workload)
+
+FULL_CELL = (10_000, 5_000)
+QUICK_CELL = (1_000, 1_000)
+REPEATS = 14                      # ABBA cycles; quartile-ratio estimator
+
+
+def churn_oom_sim(n_nodes: int, n_jobs: int, seed: int = 17):
+    """One churn + misprediction sim on the scale-benchmark cluster mix.
+    Deterministic (``charge_overhead=False``) so obs-on and obs-off arms
+    replay the identical decision sequence — also the golden-equivalence
+    fixture and the ``repro.obs.report --demo`` round trip."""
+    nodes = make_scaled_cluster(n_nodes)
+    types = sorted({n.device_type for n in nodes})
+    jobs = scale_workload(n_jobs, types, seed=seed)
+    horizon = max(j.arrival for j in jobs)
+    churn = churn_schedule(nodes, horizon=horizon, churn_frac=0.02,
+                           seed=seed)
+    return simulate(jobs, nodes, FrenzyScheduler(), charge_overhead=False,
+                    cluster_events=churn,
+                    oom_check_fn=misprediction_oracle(seed=seed))
+
+
+def _timed(n_nodes: int, n_jobs: int, enabled: bool) -> float:
+    obs.clear()
+    if enabled:
+        obs.enable()
+    else:
+        obs.disable()
+    # normalize heap/GC state before the window: clearing the previous
+    # run's rings leaves allocator debt that would otherwise be billed
+    # to whichever arm runs next
+    gc.collect()
+    t0 = time.perf_counter()
+    churn_oom_sim(n_nodes, n_jobs)
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = False):
+    n_nodes, n_jobs = QUICK_CELL if quick else FULL_CELL
+    # One untimed warmup run fills the shared caches (MARP plan memo,
+    # bytecode/branch warm-up) that would otherwise bias whichever arm
+    # runs first.  Shared-machine wall clocks here are *very* noisy:
+    # identical runs vary by tens of percent for seconds at a time, and
+    # the contamination is strictly additive (load spikes, thermal
+    # throttling — a run is never spuriously *fast*).  The estimator is
+    # built for that noise shape: arms alternate in ABBA order (off-on,
+    # on-off, ...) so drift lands on both symmetrically, and the reported
+    # overhead is the ratio of the two arms' lower quartiles — each
+    # arm's reproducible quiet-window floor, far more stable than the
+    # minimum (an extreme order statistic) or the median (polluted
+    # whenever more than half the runs straddle a spike).
+    churn_oom_sim(n_nodes, n_jobs)
+    offs: list = []
+    ons: list = []
+    for i in range(REPEATS):
+        if i % 2 == 0:
+            offs.append(_timed(n_nodes, n_jobs, enabled=False))
+            ons.append(_timed(n_nodes, n_jobs, enabled=True))
+        else:
+            ons.append(_timed(n_nodes, n_jobs, enabled=True))
+            offs.append(_timed(n_nodes, n_jobs, enabled=False))
+    obs.disable()
+    obs.clear()
+    q_off = statistics.quantiles(offs, n=4)[0]
+    q_on = statistics.quantiles(ons, n=4)[0]
+    pct = 100.0 * (q_on / q_off - 1.0) if q_off > 0 else 0.0
+    prefix = f"obs_overhead/n{n_nodes}_j{n_jobs}"
+    return [(f"{prefix}/wall_s_off", 0.0, round(q_off, 4)),
+            (f"{prefix}/wall_s_on", 0.0, round(q_on, 4)),
+            (f"{prefix}/overhead_pct", 0.0, round(pct, 2))]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="1k-node x 1k-job cell instead of 10k x 5k")
+    args = ap.parse_args(argv)
+    for name, _, val in run(quick=args.quick):
+        print(f"{name:<44} {val}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,6 +14,37 @@ import sys
 import traceback
 
 
+def _provenance() -> dict:
+    """Where/what produced this run — lands in BENCH_*.json so the perf
+    trajectory can tell machine/toolchain drift from real regressions.
+    ``compare.py`` prints drift between baseline and fresh provenance but
+    never gates on it."""
+    import os
+    import platform
+    import socket
+    import subprocess
+
+    import jax
+    try:
+        rev = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — no git / bare tree: not an error
+        rev = "unknown"
+    try:
+        host = socket.gethostname()
+    except Exception:  # noqa: BLE001
+        host = "unknown"
+    return {
+        "git_rev": rev,
+        "hostname": host,
+        "python": platform.python_version(),
+        "jax": getattr(jax, "__version__", "unknown"),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -25,9 +56,9 @@ def main() -> None:
 
     from benchmarks import (elastic_churn, failure_resilience,
                             jct_newworkload, jct_traces, kernels,
-                            memory_accuracy, oom_resilience, roofline,
-                            sched_overhead, sched_scale, serve_autoscale,
-                            train_step)
+                            memory_accuracy, obs_overhead, oom_resilience,
+                            roofline, sched_overhead, sched_scale,
+                            serve_autoscale, train_step)
     suites = [
         ("sched_overhead", sched_overhead.run),        # Fig 5a
         # --skip-slow trims the scale grid to its small corner (the full
@@ -43,6 +74,9 @@ def main() -> None:
         # SLO-aware serve autoscaling vs static replicas (serving plane)
         ("serve_autoscale",
          lambda: serve_autoscale.run(quick=args.skip_slow)),
+        # observability plane cost: obs-on vs obs-off wall clock on the
+        # churn+OOM scale cell, gated at an absolute 5% ceiling
+        ("obs_overhead", lambda: obs_overhead.run(quick=args.skip_slow)),
         ("jct_new", jct_newworkload.run),              # Fig 4
         ("jct_traces", jct_traces.run),                # Fig 5b
         ("roofline", roofline.run),                    # deliverable g
@@ -73,6 +107,7 @@ def main() -> None:
         payload = {
             "backend": jax.default_backend(),
             "skip_slow": args.skip_slow,
+            "provenance": _provenance(),
             "failed_suites": [n for n, _ in failed],
             "rows": rows,
         }

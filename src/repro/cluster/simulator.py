@@ -75,6 +75,11 @@ class SimResult:
     useful_work_s: float = 0.0              # durable non-serve compute
     #: per-victim crash log: (time, node_id, job_id, lost_work_s)
     failure_log: Sequence[Tuple[float, str, int, float]] = ()
+    #: entries evicted from the engine's ring-bounded raw logs (PR 9) —
+    #: 0 in every committed benchmark; nonzero means the returned log is
+    #: the newest ``DEFAULT_LOG_CAPACITY`` entries, reported not silent
+    oom_log_dropped: int = 0
+    failure_log_dropped: int = 0
 
     @property
     def goodput(self) -> float:
@@ -264,7 +269,9 @@ def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
                      lost_work_s=engine.lost_work_s,
                      ckpt_overhead_s=engine.ckpt_overhead_s,
                      useful_work_s=engine.useful_work_s,
-                     failure_log=tuple(engine.failure_log))
+                     failure_log=tuple(engine.failure_log),
+                     oom_log_dropped=engine.oom_log.dropped,
+                     failure_log_dropped=engine.failure_log.dropped)
 
 
 @dataclass
@@ -297,6 +304,10 @@ class StreamResult:
     lost_work_s: float = 0.0
     ckpt_overhead_s: float = 0.0
     useful_work_s: float = 0.0
+    #: ring-bounded raw-log evictions (see ``SimResult``) — the streamed
+    #: path is exactly where the unbounded logs used to bite
+    oom_log_dropped: int = 0
+    failure_log_dropped: int = 0
 
     @property
     def goodput(self) -> float:
@@ -402,4 +413,6 @@ def simulate_stream(jobs: Iterable[Job], nodes: Sequence[Node],
                         crash_failures=engine.crash_failures,
                         lost_work_s=engine.lost_work_s,
                         ckpt_overhead_s=engine.ckpt_overhead_s,
-                        useful_work_s=engine.useful_work_s)
+                        useful_work_s=engine.useful_work_s,
+                        oom_log_dropped=engine.oom_log.dropped,
+                        failure_log_dropped=engine.failure_log.dropped)

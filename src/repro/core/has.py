@@ -94,6 +94,10 @@ class ClusterPool:
         self._buckets: Dict[Tuple[str, int], _Bucket] = {}
         self._by_type: Dict[str, List[_Bucket]] = {}   # mem-ascending
         self.total_idle = 0
+        #: fleet size in devices (busy + idle) — maintained on add/remove
+        #: so the observability plane can report utilization % without an
+        #: O(nodes) scan; no scheduling decision reads it
+        self.total_devices = 0
         #: idle devices per device type — the admission shards' O(1)
         #: eligibility counters (ignores per-class memory: an upper bound
         #: on any plan's satisfiable count, exact for single-mem-class
@@ -122,6 +126,7 @@ class ClusterPool:
         if n.idle > 0:
             insort(bucket.entries, (-n.idle, pos, n.node_id))
         self.total_idle += n.idle
+        self.total_devices += n.total
         self.idle_by_type[n.device_type] = \
             self.idle_by_type.get(n.device_type, 0) + n.idle
 
@@ -181,6 +186,7 @@ class ClusterPool:
         bucket = self._buckets[(n.device_type, n.mem)]
         bucket.idle_sum -= n.idle
         self.total_idle -= n.idle
+        self.total_devices -= n.total
         self.idle_by_type[n.device_type] -= n.idle
         if n.idle > 0:
             i = bisect_left(bucket.entries, (-n.idle, pos))

@@ -120,6 +120,12 @@ from repro.core.has import Allocation, ClusterPool, Node
 from repro.core.marp import (ResourcePlan, default_ttft_slo,
                              p95_token_latency, prefill_service_seconds,
                              replicas_for_slo, serve_plan_capacity)
+# observability plane (PR 9): every hook below is pure accumulation and
+# guarded by a single ``.enabled`` read — with obs off the engine is
+# bit-identical to before (golden-tested), with obs on decisions still
+# never read obs state (telemetry-is-free invariant)
+from repro.obs.metrics import METRICS
+from repro.obs.trace import DEFAULT_LOG_CAPACITY, RingLog, TRACER
 
 # Event kinds (the typed event set).
 ARRIVE = "arrive"
@@ -891,8 +897,11 @@ class LifecycleEngine:
         self._serve_backlog = SortedIdSet()
         self.oom_count = 0
         self.oom_failures = 0               # jobs abandoned after retries
-        #: per-OOM telemetry: (time, job_id, device_type, pred, observed)
-        self.oom_log: List[Tuple[float, int, str, float, float]] = []
+        #: per-OOM telemetry: (time, job_id, device_type, pred, observed).
+        #: Ring-bounded (PR 9) so a streamed 1M-job pathological run can't
+        #: grow it without limit; evictions are counted in ``.dropped``
+        #: and surfaced as ``SimResult.oom_log_dropped``, never silent.
+        self.oom_log: RingLog = RingLog(DEFAULT_LOG_CAPACITY)
         # failure-plane telemetry (pure accumulation — never consulted by
         # any decision, per the telemetry-is-free invariant)
         self.node_fail_count = 0            # abrupt node crash-faults
@@ -902,9 +911,21 @@ class LifecycleEngine:
         self.lost_work_s = 0.0              # compute rolled back by crashes
         self.ckpt_overhead_s = 0.0          # run time spent saving state
         self.useful_work_s = 0.0            # durable non-serve compute
-        #: per-victim crash log: (time, node_id, job_id, lost_work_s)
-        self.failure_log: List[Tuple[float, str, int, float]] = []
+        #: per-victim crash log: (time, node_id, job_id, lost_work_s) —
+        #: ring-bounded like ``oom_log`` (drops reported, not silent)
+        self.failure_log: RingLog = RingLog(DEFAULT_LOG_CAPACITY)
         self.makespan = 0.0
+        # observability plane: event countdown to the next metrics sample
+        # (``METRICS.sample_stride`` amortizes the sampling cost; primed
+        # here, so sim-path sampling starts with engines constructed
+        # while metrics are enabled) and the admission-wait buffer
+        # flushed into the histogram at each sample; a new engine is a
+        # new run — job ids restart, so open tracer segments from a
+        # previous run must not bleed into this one
+        self._obs_tick = METRICS.sample_stride if METRICS.enabled else 0
+        self._admit_waits: List[float] = []
+        if TRACER.enabled:
+            TRACER.new_run()
 
     # ------------------------------------------------------------ live API
     def submit_job(self, job: Job, now: float = 0.0) -> Job:
@@ -916,8 +937,12 @@ class LifecycleEngine:
         self.peak_live_jobs = max(self.peak_live_jobs, len(self.jobs))
         if job.kind == "serve" and job.serve_accounted < 0:
             job.serve_accounted = now       # queue wait counts against SLO
+        if TRACER.enabled:
+            TRACER.job_state(job.job_id, "queued", now)
         if not self.try_admit(job, now):
             self.queued.append(job)
+        if METRICS.enabled:
+            self._obs_event(now)            # live path: no _dispatch tick
         return job
 
     def try_admit(self, job: Job, now: float = 0.0) -> bool:
@@ -952,6 +977,8 @@ class LifecycleEngine:
             self._run_scheduler(now, "finish")
         self._maybe_migrate(now)
         self._retry_serve_scale(now)
+        if METRICS.enabled:
+            self._obs_event(now)            # live path: no _dispatch tick
 
     def node_join(self, node: Optional[Node] = None, node_id: str = "",
                   now: float = 0.0) -> Optional[Node]:
@@ -967,6 +994,8 @@ class LifecycleEngine:
         if node.node_id in self.pool.nodes:
             return self.pool.nodes[node.node_id]
         self.pool.add_node(node)
+        if TRACER.enabled:
+            TRACER.instant("node_join", now, node.node_id)
         if self._gate_open():
             self._run_scheduler(now, "churn")
         self._maybe_migrate(now)
@@ -978,6 +1007,8 @@ class LifecycleEngine:
         requeue them with remaining work, drop the node from the pool."""
         if node_id not in self.pool.nodes:
             return []                       # already gone: ignore
+        if TRACER.enabled:
+            TRACER.instant("node_leave", now, node_id)
         victims = sorted((self.jobs[jid]
                           for jid in self._node_jobs.get(node_id, ())),
                          key=lambda j: j.job_id)
@@ -1000,15 +1031,22 @@ class LifecycleEngine:
         if node_id not in self.pool.nodes:
             return []                       # already gone: ignore
         self.node_fail_count += 1
+        if TRACER.enabled:
+            TRACER.instant("node_fail", now, node_id)
         victims: List[Job] = []
         for jid in sorted(self._node_jobs.get(node_id, {})):
             job = self.jobs[jid]
             if job.kind == "serve" \
                     and self._fail_serve_replicas(job, node_id, now):
                 self.failure_log.append((now, node_id, jid, 0.0))
+                if TRACER.enabled:
+                    TRACER.instant("replica_fail", now, jid)
                 continue                    # partial loss: job survives
             lost = self._crash(job, now)
             self.failure_log.append((now, node_id, jid, lost))
+            if TRACER.enabled:
+                TRACER.instant("crash", now, jid)
+                TRACER.job_state(jid, job.state, now)
             victims.append(job)
         self._offline[node_id] = self.pool.remove_node(node_id)
         self._node_jobs.pop(node_id, None)  # drained by the crashes above
@@ -1114,6 +1152,8 @@ class LifecycleEngine:
                 break
             now, _, kind, payload, epoch = heapq.heappop(events)
             self._dispatch(now, kind, payload, epoch)
+        if METRICS.enabled:
+            self._obs_sample(self.makespan)  # close the series at the end
 
     def _make_streams(self, jobs, cluster_events, rate_events) -> List[list]:
         """Lazy event sources: ``[head, iterator, to_event, last_time]``
@@ -1150,6 +1190,17 @@ class LifecycleEngine:
         s[0] = ev
 
     def _dispatch(self, now: float, kind: str, payload, epoch: int) -> None:
+        # inline stride tick (hot path): a countdown primed at engine
+        # construction — 0 forever when metrics were off then, one
+        # compare-and-decrement per event when on (``_obs_sample``
+        # re-arms it, re-reading ``METRICS.enabled`` so a mid-run
+        # ``disable()`` stops sampling after at most one stride)
+        t = self._obs_tick
+        if t > 0:
+            if t == 1:
+                self._obs_sample(now)
+            else:
+                self._obs_tick = t - 1
         if kind == ARRIVE:
             self.makespan = max(self.makespan, now)
             self._on_arrive(now, payload)
@@ -1201,6 +1252,8 @@ class LifecycleEngine:
             self.makespan = max(self.makespan, now)
             job.state = "queued"
             self.queued.append(job)
+            if TRACER.enabled:              # backoff expired: requeued
+                TRACER.job_state(job.job_id, "queued", now)
             if self._gate_open():
                 self._run_scheduler(now, "restart")
         elif kind == RESCHEDULE:
@@ -1214,6 +1267,10 @@ class LifecycleEngine:
         self.peak_live_jobs = max(self.peak_live_jobs, len(self.jobs))
         if job.kind == "serve" and job.serve_accounted < 0:
             job.serve_accounted = now       # queue wait counts against SLO
+        # (no tracer emit here: the arrival's implicit ``queued`` segment
+        # starts at ``job.arrival`` and is synthesized by
+        # ``TRACER.admitted`` at first start — one emit instead of two on
+        # the hottest path; jobs still queued at run end have no span)
         self.queued.append(job)
         # Exact admission gate, extended to arrivals: when even the
         # cheapest queued plan (including this job's) cannot fit the idle
@@ -1222,6 +1279,13 @@ class LifecycleEngine:
         # ``sched_calls`` stays one-per-arrival like the ungated path.
         if self.pool.total_idle < self.queued.min_need():
             self.sched_calls += 1
+            if TRACER.enabled:              # the gate *is* the pass
+                tr = TRACER
+                b = tr.sched                # inline emit: flat-ring record
+                b.append("arrive"); b.append(now)
+                b.append(0.0); b.append(0)
+                if len(b) > tr.sched_trim:
+                    tr.trim()
             return
         if self._admit_single:
             self._fast_admit(now, job)
@@ -1252,10 +1316,24 @@ class LifecycleEngine:
         self.sched_time_by_kind["arrive"] = \
             self.sched_time_by_kind.get("arrive", 0.0) + elapsed
         self.sched_calls += 1
-        if alloc is not None:
-            start = now + (elapsed if self.charge_overhead else 0.0)
-            self._start(job, alloc.placements, alloc.plan.d, alloc.plan.t,
-                        start)
+        if alloc is None:
+            if TRACER.enabled:
+                # reuses the measurement above — emitted *outside* the
+                # timed window, so ``charge_overhead`` virtual timestamps
+                # are identical with tracing on or off
+                tr = TRACER
+                b = tr.sched
+                b.append("arrive"); b.append(now)
+                b.append(elapsed); b.append(0)
+                if len(b) > tr.sched_trim:
+                    tr.trim()
+            return
+        start = now + (elapsed if self.charge_overhead else 0.0)
+        # a successful fast-admit pass and its admission are one-to-one:
+        # the pass rides the job's ``adm`` trace record (``pass_wall``)
+        # instead of a second ring emit on the hottest path
+        self._start(job, alloc.placements, alloc.plan.d, alloc.plan.t,
+                    start, pass_wall=elapsed)
 
     def _run_scheduler(self, now: float, trigger: str = "other") -> None:
         t0 = time.perf_counter()
@@ -1265,6 +1343,13 @@ class LifecycleEngine:
         self.sched_time_by_kind[trigger] = \
             self.sched_time_by_kind.get(trigger, 0.0) + elapsed
         self.sched_calls += 1
+        if TRACER.enabled:                  # outside the timed window
+            tr = TRACER
+            b = tr.sched
+            b.append(trigger); b.append(now)
+            b.append(elapsed); b.append(len(decisions))
+            if len(b) > tr.sched_trim:
+                tr.trim()
         if not decisions:
             return
         start = now + (elapsed if self.charge_overhead else 0.0)
@@ -1277,11 +1362,23 @@ class LifecycleEngine:
             self._start(job, placements, d, t, start)
 
     def _start(self, job: Job, placements, d: int, t: int,
-               start: float) -> None:
+               start: float, pass_wall: float = None) -> None:
         job.placements = tuple(placements)
         job.state = "running"
         if job.start_time < 0:
             job.start_time = start
+            if METRICS.enabled:             # first admission: queue wait,
+                self._admit_waits.append(start - job.arrival)
+                # flushed into the histogram at the next ``_obs_sample``
+        if TRACER.enabled:                  # inline ``TRACER.admitted()``
+            tr = TRACER                     # — one 4-slot record implies
+            b = tr.adm                      # the queued span, the running
+            b.append(job.job_id)            # open, and (fused fast-admit)
+            b.append(job.arrival)           # the scheduler pass; spans
+            b.append(start)                 # are synthesized cold, in
+            b.append(pass_wall)             # ``Tracer.events``
+            if len(b) > tr.adm_trim:
+                tr.trim()
         self._register(job)
         if self.rate_fn is not None:
             raw = self.rate_fn(job, job.placements, d, t)
@@ -1325,6 +1422,12 @@ class LifecycleEngine:
         job.state = "done"
         job.finish_time = now
         job.samples_done = float(job.total_samples)
+        if TRACER.enabled:                  # inline ``TRACER.finished()``
+            tr = TRACER                     # — the closing span IS the
+            b = tr.fin                      # "done" marker (no instant)
+            b.append(job.job_id); b.append(now)
+            if len(b) > tr.fin_trim:
+                tr.trim()
         self._demoted.pop(job.job_id, None)
         self._completed(job)
 
@@ -1403,6 +1506,16 @@ class LifecycleEngine:
                 self.queued.append(job)
         else:
             self._completed(job)
+        if TRACER.enabled:
+            # one fused record for the whole OOM: the ``oom:`` prefix has
+            # materialization synthesize the "oom" instant alongside the
+            # queued | backoff | failed transition
+            tr = TRACER
+            b = tr.mark
+            b.append(job.job_id); b.append(now)
+            b.append("oom:" + job.state)
+            if len(b) > tr.mark_trim:
+                tr.trim()
         # the released capacity may admit queued work (incl. this job)
         if self._gate_open():
             self._run_scheduler(now, "oom")
@@ -1427,6 +1540,8 @@ class LifecycleEngine:
         self.preemption_count += 1
         self._demoted.pop(job.job_id, None)
         self.queued.append(job)
+        if TRACER.enabled:
+            TRACER.job_state(job.job_id, "queued", now)
 
     # --------------------------------------------------- elastic migration
     def _maybe_migrate(self, now: float) -> None:
@@ -1512,6 +1627,8 @@ class LifecycleEngine:
                                (new_finish, self._seq, FINISH, job,
                                 job.epoch))
             migrated = True
+            if TRACER.enabled:
+                TRACER.instant("migrate", now, job.job_id)
             self._track_demotion(job)
         # migrations released their old (often different-class) placements;
         # queued jobs may now fit — one more admission pass, same exact gate
@@ -1692,6 +1809,10 @@ class LifecycleEngine:
             job.placements = tuple(p for rep in job.replica_placements
                                    for p in rep) \
                 + tuple(p for rep in job.prefill_placements for p in rep)
+            if TRACER.enabled:
+                TRACER.instant("scale", now,
+                               (job.job_id, job.serve_replicas,
+                                job.prefill_replicas))
         if job.serve_replicas < target or job.prefill_replicas < pf_target:
             self._serve_backlog.add(job.job_id)
         else:
@@ -1747,6 +1868,8 @@ class LifecycleEngine:
                     good = False            # no prefill pool: nothing admits
             if good:
                 job.slo_good_s += dt
+                if METRICS.enabled:
+                    METRICS.inc("serve/slo_good_s", dt)
             per_replica = job.plan.n_devices if job.plan is not None else 0
             devs = job.serve_replicas * per_replica
             if job.disaggregated and job.prefill_plan is not None:
@@ -1761,6 +1884,48 @@ class LifecycleEngine:
             job.p95_obs_s += dt
             job.tokens_served += dt * min(job.request_rate, cap)
         # queued/preempted segments count as missed: no replicas serving
+        if METRICS.enabled:
+            METRICS.inc("serve/slo_total_s", dt)
+
+    # ------------------------------------------------- observability plane
+    def _obs_event(self, now: float) -> None:
+        """One engine event passed (callers pre-check ``METRICS.enabled``):
+        count down the sample stride and feed the bounded time series at
+        the boundary.  Pure accumulation — the stride only amortizes the
+        sampling cost, it never changes what the engine does."""
+        t = self._obs_tick
+        if t <= 1:                          # also re-arms the countdown
+            self._obs_sample(now)
+        else:
+            self._obs_tick = t - 1
+
+    def _obs_sample(self, now: float) -> None:
+        """Sample pool/queue/serve state into ``METRICS`` (downsampled
+        series — bounded memory regardless of run length).  The pool only
+        mutates inside events, so the event grid is the mutation grid.
+        Re-arms the ``_dispatch`` countdown."""
+        m = METRICS
+        self._obs_tick = m.sample_stride if m.enabled else 0
+        w = self._admit_waits               # buffered first-start waits
+        if w:
+            m.observe_many("queue/admission_wait_s", w)
+            m.inc("jobs/admitted", len(w))
+            w.clear()
+        pool = self.pool
+        total = pool.total_devices
+        if total > 0:
+            m.sample("cluster/util_pct", now,
+                     100.0 * (total - pool.total_idle) / total)
+        for dev_type, idle in pool.idle_by_type.items():
+            m.sample("cluster/idle/" + dev_type, now, float(idle))
+        m.sample("queue/depth", now, float(len(self.queued)))
+        if self.scale_up_count:             # any serve activity at all
+            m.sample("serve/replicas", now,
+                     float(self.scale_up_count - self.scale_down_count))
+            tot = m.counters.get("serve/slo_total_s", 0.0)
+            if tot > 0.0:
+                m.sample("serve/slo_attainment", now,
+                         m.counters.get("serve/slo_good_s", 0.0) / tot)
 
     # ------------------------------------------------------------- helpers
     def _track_demotion(self, job: Job) -> None:

@@ -31,6 +31,10 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+# observability plane (decision-free): per-op call counters + opt-in
+# eager timing; one boolean read per public-op call when disabled
+from repro.obs.metrics import METRICS
+
 ENV_VAR = "REPRO_KERNELS"
 
 #: op -> {"pallas": fn, "ref": fn}; populated by ``register`` below.
@@ -95,7 +99,23 @@ def resolve(op: str, backend: Optional[str] = None) -> Tuple[str, Callable]:
 
 
 def call(op: str, *args, **kw):
+    if METRICS.enabled:
+        return _observed(op, resolve(op)[1], args, kw)
     return resolve(op)[1](*args, **kw)
+
+
+def _observed(op: str, fn: Callable, args: tuple, kw: dict):
+    """Obs-enabled call path: count the op and, with ``op_timing`` opted
+    in, measure eager wall time per call (dispatch-side — the returned
+    array is *not* blocked on, so jit/async dispatch is unperturbed;
+    timings are skipped inside jit traces, where args are tracers)."""
+    METRICS.inc("ops/" + op)
+    if METRICS.op_timing and _concrete(*args):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        METRICS.observe("ops_s/" + op, time.perf_counter() - t0)
+        return out
+    return fn(*args, **kw)
 
 
 # ------------------------------------------------------------ autotune ---
@@ -202,6 +222,10 @@ def _attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
 def attention(q, k, v, *, causal: bool = True, window: int = 0,
               softmax_scale: Optional[float] = None):
     """q: (b, sq, H, D); k, v: (b, sk, K, D), H = K*G.  Returns (b, sq, H, D)."""
+    if METRICS.enabled:
+        return _observed("attention", resolve("attention")[1], (q, k, v),
+                         dict(causal=causal, window=window,
+                              softmax_scale=softmax_scale))
     return resolve("attention")[1](q, k, v, causal=causal, window=window,
                                    softmax_scale=softmax_scale)
 
@@ -248,6 +272,10 @@ def flash_decode(q, k_cache, v_cache, valid, *,
     Returns (b, 1, H, D).  TPU: split-KV Pallas kernel (parallel over
     cache blocks, two-pass online-softmax reduction); CPU/GPU: ref
     bit-identical to the seed ``decode_attention``."""
+    if METRICS.enabled:
+        return _observed("flash_decode", resolve("flash_decode")[1],
+                         ("gqa", q, k_cache, v_cache, valid),
+                         dict(softmax_scale=softmax_scale))
     return resolve("flash_decode")[1]("gqa", q, k_cache, v_cache, valid,
                                       softmax_scale=softmax_scale)
 
@@ -258,6 +286,10 @@ def mla_flash_decode(q_lat, q_rope, c_kv, k_rope, valid, *, denom: float):
     q_lat: (b, H, r); q_rope: (b, H, dr); c_kv: (b, S, r); k_rope:
     (b, S, dr); valid: (b, S) bool; denom = sqrt(dn + dr).  Returns
     o_lat (b, H, r)."""
+    if METRICS.enabled:
+        return _observed("mla_flash_decode", resolve("flash_decode")[1],
+                         ("mla", q_lat, q_rope, c_kv, k_rope, valid),
+                         dict(denom=denom))
     return resolve("flash_decode")[1]("mla", q_lat, q_rope, c_kv, k_rope,
                                       valid, denom=denom)
 
@@ -291,6 +323,10 @@ def _ssd_pallas(x, dt_raw, A_log, B, C, D, dt_bias, *, chunk: int = 128):
 def ssd(x, dt_raw, A_log, B, C, D, dt_bias, *, chunk: int = 128):
     """x: (b,s,h,p); dt_raw pre-softplus (b,s,h); A_log/D/dt_bias (h,);
     B, C: (b,s,n).  Returns (y (b,s,h,p), final_state (b,h,p,n) fp32)."""
+    if METRICS.enabled:
+        return _observed("ssd_scan", resolve("ssd_scan")[1],
+                         (x, dt_raw, A_log, B, C, D, dt_bias),
+                         dict(chunk=chunk))
     return resolve("ssd_scan")[1](x, dt_raw, A_log, B, C, D, dt_bias,
                                   chunk=chunk)
 
@@ -333,6 +369,11 @@ def adam_update_leaf(g, m, v, master, *, lr, beta1: float, beta2: float,
                      eps: float, wd: float, c1, c2):
     """One fused Adam step on one (flattened) parameter leaf.  All fp32;
     lr/c1/c2 may be traced.  Returns (m', v', master')."""
+    if METRICS.enabled:
+        return _observed("adam_update", resolve("adam_update")[1],
+                         (g, m, v, master),
+                         dict(lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+                              wd=wd, c1=c1, c2=c2))
     return resolve("adam_update")[1](g, m, v, master, lr=lr, beta1=beta1,
                                      beta2=beta2, eps=eps, wd=wd,
                                      c1=c1, c2=c2)

@@ -350,6 +350,31 @@ def test_frenzy_simulation_identical_to_seed(trace):
         assert g.rate == w.rate, w.job_id
 
 
+def test_frenzy_simulation_identical_with_obs_enabled():
+    """Observability round-trip golden (PR 9): the full plane enabled —
+    tracer + metrics, enable → run → disable — must still match the seed
+    event loop decision for decision (the telemetry-is-free invariant,
+    held against the *seed*, not just against an obs-off run)."""
+    from repro import obs
+    nodes = make_cluster(PAPER_SIM_CLUSTER)
+    types = sorted({n.device_type for n in nodes})
+    jobs = new_workload(30, types, seed=13)
+    want = _seed_simulate(copy.deepcopy(jobs), copy.deepcopy(nodes))
+    obs.enable()
+    try:
+        got = simulate(copy.deepcopy(jobs), copy.deepcopy(nodes),
+                       FrenzyScheduler(), charge_overhead=False).jobs
+    finally:
+        obs.disable()
+        obs.clear()
+    for w, g in zip(sorted(want, key=lambda j: j.job_id),
+                    sorted(got, key=lambda j: j.job_id)):
+        assert g.placements == w.placements, w.job_id
+        assert g.start_time == w.start_time, w.job_id
+        assert g.finish_time == w.finish_time, w.job_id
+        assert g.rate == w.rate, w.job_id
+
+
 # --------------------------------------------------------------------------
 # live-path golden test: lifecycle-engine orchestrator vs seed orchestrator
 

@@ -1,0 +1,104 @@
+"""Scheduler telemetry (PR 7): per-event-kind wall-time split and the
+peak-live-jobs high-water mark.
+
+``sched_time_by_kind`` must account for every scheduler pass the engine
+ran, keyed by the typed event kind that triggered it — checked here both
+against the engine's own totals and, with the observability plane on,
+against the tracer's scheduler-pass spans (each pass is one span tagged
+with its trigger, so the two views must name exactly the same kinds).
+"""
+import pytest
+
+from repro import obs
+from repro.cluster.schedulers import FrenzyScheduler
+from repro.cluster.simulator import simulate, simulate_stream
+from repro.cluster.traces import (churn_schedule, misprediction_oracle,
+                                  scale_workload, scale_workload_iter)
+from repro.core.orchestrator import make_cluster, PAPER_SIM_CLUSTER
+from repro.obs.trace import TRACER
+
+#: every trigger string the engine's event handlers can pass to
+#: ``_run_scheduler`` (plus the fast-admit path's "arrive")
+KNOWN_KINDS = {"arrive", "finish", "churn", "fail", "reschedule",
+               "restart", "oom", "migrate", "scale", "other"}
+
+
+@pytest.fixture(autouse=True)
+def _obs_reset():
+    obs.disable()
+    obs.clear()
+    yield
+    obs.disable()
+    obs.clear()
+
+
+def _nodes_types():
+    nodes = make_cluster(PAPER_SIM_CLUSTER)
+    return nodes, sorted({n.device_type for n in nodes})
+
+
+def test_sched_time_by_kind_accounts_every_pass():
+    nodes, types = _nodes_types()
+    jobs = scale_workload(80, types, seed=11)
+    horizon = max(j.arrival for j in jobs)
+    churn = churn_schedule(nodes, horizon=horizon, churn_frac=0.3, seed=11)
+    r = simulate(jobs, nodes, FrenzyScheduler(), charge_overhead=False,
+                 cluster_events=churn,
+                 oom_check_fn=misprediction_oracle(severity=0.6, frac=0.3,
+                                                   seed=11))
+    kinds = set(r.sched_time_by_kind)
+    assert kinds <= KNOWN_KINDS
+    assert "arrive" in kinds                # every trace has arrivals
+    assert r.ooms > 0 and "oom" in kinds    # the fixture forces OOM passes
+    assert "churn" in kinds                 # ... and churn passes
+    assert all(v >= 0.0 for v in r.sched_time_by_kind.values())
+    # the split is a partition of total scheduler wall time
+    assert sum(r.sched_time_by_kind.values()) == \
+        pytest.approx(r.sched_time_s, rel=1e-9)
+
+
+def test_sched_time_by_kind_matches_traced_passes():
+    """With obs on, every scheduler pass is one tagged span — the
+    telemetry dict and the trace must name exactly the same kinds."""
+    nodes, types = _nodes_types()
+    jobs = scale_workload(80, types, seed=11)
+    horizon = max(j.arrival for j in jobs)
+    churn = churn_schedule(nodes, horizon=horizon, churn_frac=0.3, seed=11)
+    obs.enable()
+    try:
+        r = simulate(jobs, nodes, FrenzyScheduler(), charge_overhead=False,
+                     cluster_events=churn,
+                     oom_check_fn=misprediction_oracle(severity=0.6,
+                                                       frac=0.3, seed=11))
+        sched = TRACER.sched_spans()
+    finally:
+        obs.disable()
+    assert len(sched) == r.sched_calls      # one span per pass, exactly
+    # gate-closed arrivals are zero-wall passes; every kind that spent
+    # wall time appears in the dict, and no dict key lacks a traced pass
+    assert {s[1] for s in sched} == set(r.sched_time_by_kind)
+    for kind, total in r.sched_time_by_kind.items():
+        assert sum(s[3] for s in sched if s[1] == kind) == \
+            pytest.approx(total, rel=1e-9)
+
+
+def test_peak_live_jobs_matches_hand_computed_trace():
+    """Streamed mode drops jobs as they complete, so ``peak_live_jobs``
+    is a real high-water mark — recompute it by hand from the job trace
+    (a job is live from arrival to its finish event) and compare."""
+    nodes, types = _nodes_types()
+    # fault-free: completion time == finish_time for every job
+    ref = simulate(scale_workload(60, types, seed=3), nodes,
+                   FrenzyScheduler(), charge_overhead=False)
+    assert ref.unfinished == 0
+    windows = [(j.arrival, j.finish_time) for j in ref.jobs]
+    expected = max(sum(1 for a, f in windows if a <= t < f)
+                   for t, _ in windows)     # peaks happen at arrivals
+    streamed = simulate_stream(scale_workload_iter(60, types, seed=3),
+                               nodes, FrenzyScheduler(),
+                               charge_overhead=False)
+    assert streamed.n_finished == 60
+    assert streamed.peak_live_jobs == expected
+    # the retained path's monotone job map makes its "peak" the total
+    # tracked-job count — still reported, still sane
+    assert ref.peak_live_jobs == 60
