@@ -24,12 +24,16 @@
 #                     obs on -> Chrome-trace + metrics export -> re-read
 #                     -> report (fails if any section comes back empty),
 #                     then the obs/telemetry test files
+#   make coloc-smoke  fractional-GPU packing smoke: the colocation
+#                     benchmark's quick cell (coloc vs whole-device arms
+#                     on one mixed 100-node cell) plus the slice-safety
+#                     and colocate=False bit-identity test files
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 tier1-fast bench-smoke bench bench-json bench-compare \
-	memcheck serve-smoke failure-smoke obs-smoke
+	memcheck serve-smoke failure-smoke obs-smoke coloc-smoke
 
 tier1:
 	$(PY) -m pytest -x -q
@@ -74,4 +78,9 @@ failure-smoke:
 obs-smoke:
 	$(PY) -m repro.obs.report --demo
 	$(PY) -m pytest -x -q tests/test_obs.py tests/test_sched_telemetry.py \
+		tests/test_golden_equivalence.py
+
+coloc-smoke:
+	$(PY) -m benchmarks.colocation --quick
+	$(PY) -m pytest -x -q tests/test_colocation.py \
 		tests/test_golden_equivalence.py

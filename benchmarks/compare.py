@@ -76,6 +76,23 @@ KEY_RULES: Tuple[Tuple[Callable[[str], bool], str, str], ...] = (
     (lambda n: n == "obs_overhead/n1000_j1000/overhead_pct",
      "derived", "max:10"),
     (lambda n: n.startswith("obs_overhead/"), "derived", "skip"),
+    # colocation cells: utilization rows are percentage-typed (0-100, see
+    # benchmarks/colocation._utilization_pct) precisely so the 25%
+    # relative gate below has headroom — gating the raw 0-1 ratio near
+    # zero would trip on scheduler jitter.  The cross-arm gain row stays
+    # informational (its sign is workload-dependent); each arm's own
+    # utilization, JCT, and the zero-repeat-OOM ceiling are the contract.
+    (lambda n: n.startswith("colocation/") and "/util_gain_" in n,
+     "derived", "skip"),
+    (lambda n: n.startswith("colocation/") and "/util_" in n
+     and n.endswith("_pct"), "derived", "higher"),
+    (lambda n: n.startswith("colocation/") and "/avg_jct_s_" in n,
+     "derived", "lower"),
+    (lambda n: n.startswith("colocation/") and n.endswith("/repeat_ooms"),
+     "derived", "max:0"),
+    (lambda n: n.startswith("colocation/") and "/slo_" in n,
+     "derived", "higher"),
+    (lambda n: n.startswith("colocation/"), "derived", "skip"),
     (lambda n: n.startswith("serve_autoscale/") and "/slo_" in n,
      "derived", "higher"),
     (lambda n: n.endswith("/gpu_s_saving"), "derived", "higher"),

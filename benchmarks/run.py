@@ -54,7 +54,7 @@ def main() -> None:
                     help="also write rows to this JSON file")
     args = ap.parse_args()
 
-    from benchmarks import (elastic_churn, failure_resilience,
+    from benchmarks import (colocation, elastic_churn, failure_resilience,
                             jct_newworkload, jct_traces, kernels,
                             memory_accuracy, obs_overhead, oom_resilience,
                             roofline, sched_overhead, sched_scale,
@@ -74,6 +74,8 @@ def main() -> None:
         # SLO-aware serve autoscaling vs static replicas (serving plane)
         ("serve_autoscale",
          lambda: serve_autoscale.run(quick=args.skip_slow)),
+        # fractional-GPU packing: train/serve colocation vs whole devices
+        ("colocation", lambda: colocation.run(quick=args.skip_slow)),
         # observability plane cost: obs-on vs obs-off wall clock on the
         # churn+OOM scale cell, gated at an absolute 5% ceiling
         ("obs_overhead", lambda: obs_overhead.run(quick=args.skip_slow)),

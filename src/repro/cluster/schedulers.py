@@ -18,6 +18,16 @@ remaining work ahead — churn must not starve nearly-finished work.
 k-way shard merge instead of re-sorting), and ``FrenzyScheduler``
 additionally takes the sharded-pass fast path when given the queue plus
 the shared pool — bit-identical decisions either way.
+
+Fractional-GPU packing (PR 10): only pool-applying schedulers can place
+byte slices — a slice grant is a budget against the *shared* pool's
+per-device open-slot accounting, which a snapshot scheduler's private
+``{node_id: Node}`` clone cannot represent (``work[nid].idle -= k``
+counts whole devices).  ``Scheduler.supports_slicing`` is the capability
+bit: ``HASAdmission`` (hence ``FrenzyScheduler``) sets it True; the
+snapshot baselines here inherit the default False and the engine rejects
+``colocate=True`` for them at construction instead of silently dropping
+byte budgets.
 """
 from __future__ import annotations
 
@@ -41,7 +51,10 @@ class FrenzyScheduler(HASAdmission):
     """MARP's ranked plans + HAS best-fit placement, FIFO order — the
     paper-named face of the shared ``lifecycle.HASAdmission`` policy (one
     admission implementation for simulator, orchestrator, and serverless
-    submission; see that class for the indexing/no-rollback details)."""
+    submission; see that class for the indexing/no-rollback details).
+    Inherits ``supports_slicing = True``: with ``colocate=True`` it
+    places small serve replicas and LoRA finetunes as byte slices in the
+    slack of running train jobs."""
     name = "frenzy"
 
 

@@ -32,7 +32,7 @@ from typing import Dict, Iterable, List, Sequence, Tuple
 
 from repro.core import calibration
 from repro.core.devices import DEVICE_TYPES
-from repro.core.has import Node
+from repro.core.has import Grant, Node
 from repro.core.lifecycle import (  # noqa: F401  (re-exported compat names)
     ClusterEvent, Job, LifecycleEngine, OomCheckFn, RateEvent, ReplanFn,
     Scheduler, DEFAULT_MIGRATION_BANDWIDTH, DEFAULT_SCALE_UP_DELAY,
@@ -171,14 +171,24 @@ def job_rate(job: Job, placements: Sequence[Tuple[str, int]],
     if job.kind == "serve":
         return 1.0
     n_devices = 0
+    shared = False
     slowest = None
-    first_type = nodes[placements[0][0]].device_type
-    for node_id, k in placements:
+    p0 = placements[0]
+    first_type = nodes[p0.node_id if isinstance(p0, Grant)
+                       else p0[0]].device_type
+    for p in placements:
+        node_id, k = p
         dt = nodes[node_id].device_type
         flops = DEVICE_TYPES[dt].flops
         if slowest is None or flops < slowest:
             slowest = flops
-        n_devices += k
+        if k == 0 and isinstance(p, Grant):
+            # memory slice (colocation): one device's compute, shared
+            # with the exclusive tenant it harvests slack from
+            n_devices += p.k
+            shared = True
+        else:
+            n_devices += k
     dev = DEVICE_TYPES[first_type]
     n_active = _active_analytic(job.cfg)
     flops_per_sample = 6.0 * n_active * job.seq_len
@@ -189,6 +199,8 @@ def job_rate(job: Job, placements: Sequence[Tuple[str, int]],
         * _tp_efficiency(t, dev) * _dp_efficiency(d)
     if len({nid for nid, _ in placements}) > 1:
         eff *= 0.75                          # cross-node penalty
+    if shared:
+        eff *= 0.5                           # compute-sharing discount
     return n_devices * slowest * eff / flops_per_sample
 
 
@@ -205,7 +217,8 @@ def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
              ckpt_policy: str = None,
              ckpt_fixed_interval_s: float = 0.0,
              restart_backoff_s: float = 0.0,
-             max_restarts: int = None
+             max_restarts: int = None,
+             colocate: bool = False
              ) -> SimResult:
     """Drive the shared lifecycle engine over a trace.
 
@@ -226,6 +239,9 @@ def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
     max_restarts: failure plane (PR 8) — periodic-checkpoint policy
     (None | "young_daly" | "fixed") and the crashed-job restart budget;
     all dormant at the defaults.
+    colocate: fractional-GPU packing (PR 10) — serve replicas and LoRA
+    finetune jobs harvest slack bytes of running train jobs (memory-slice
+    ``Grant`` placements; requires ``HASAdmission``-family schedulers).
     """
     engine = LifecycleEngine(nodes, scheduler,
                              charge_overhead=charge_overhead,
@@ -239,7 +255,8 @@ def simulate(jobs: Sequence[Job], nodes: Sequence[Node],
                              ckpt_fixed_interval_s=ckpt_fixed_interval_s,
                              restart_backoff_s=restart_backoff_s,
                              max_restarts=max_restarts,
-                             reset=True)
+                             reset=True,
+                             colocate=colocate)
     pool_nodes = engine.pool.nodes
     engine.rate_fn = lambda job, placements, d, t: \
         job_rate(job, placements, pool_nodes, d, t)
@@ -346,7 +363,8 @@ def simulate_stream(jobs: Iterable[Job], nodes: Sequence[Node],
                     ckpt_policy: str = None,
                     ckpt_fixed_interval_s: float = 0.0,
                     restart_backoff_s: float = 0.0,
-                    max_restarts: int = None
+                    max_restarts: int = None,
+                    colocate: bool = False
                     ) -> StreamResult:
     """Drive the lifecycle engine over *streamed* traces: ``jobs`` (and
     the event traces) may be generators (``traces.scale_workload_iter``
@@ -385,7 +403,8 @@ def simulate_stream(jobs: Iterable[Job], nodes: Sequence[Node],
                              max_restarts=max_restarts,
                              retain_jobs=False,
                              on_complete=on_complete,
-                             reset=True)
+                             reset=True,
+                             colocate=colocate)
     pool_nodes = engine.pool.nodes
     engine.rate_fn = lambda job, placements, d, t: \
         job_rate(job, placements, pool_nodes, d, t)

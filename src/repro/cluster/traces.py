@@ -20,6 +20,7 @@ from __future__ import annotations
 import heapq
 import math
 import random
+from collections import deque
 from dataclasses import replace
 from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
@@ -59,12 +60,13 @@ BERT_SIZES = {
 
 def _mk_job(rng: random.Random, job_id: int, arrival: float,
             cfg: ModelConfig, batch: int, seq: int, samples: int,
-            device_types: Sequence[str]) -> Optional[SimJob]:
+            device_types: Sequence[str],
+            lora_rank: int = 0) -> Optional[SimJob]:
     # shared memoized tuple: jobs with the same (cfg, batch, seq) carry the
     # *same* plan-list object, so schedulers can dedupe no-fit checks
     plans = predict_plans_shared(cfg, batch, seq,
                                  device_types=tuple(device_types),
-                                 max_devices=64)
+                                 max_devices=64, lora_rank=lora_rank)
     if not plans:
         return None
     # opportunistic baselines use a "user-specified" count: the smallest
@@ -157,13 +159,19 @@ FINETUNE_SIZES = ("gpt2-350m", "gpt2-774m", "gpt2-1.5b")
 def finetune_workload_iter(n_jobs: int, device_types: Sequence[str],
                            seed: int = 0, mean_interarrival: float = 2.0,
                            mean_minutes: float = 5.0,
-                           start_id: int = 0) -> Iterator[SimJob]:
+                           start_id: int = 0,
+                           lora: bool = False) -> Iterator[SimJob]:
     """LoRA finetune traffic (``kind="finetune"``): short, latency-tolerant
     jobs whose training state is adapters-only (``ckpt.lora_state_bytes``)
     — near-free checkpoints make them ideal preemption/backfill fodder for
-    the admission shards.  Placement still prices the *full* base model
-    (frozen weights + activations live on-device); only the checkpoint
-    and migration traffic shrinks."""
+    the admission shards.  By default placement still prices the *full*
+    training state (frozen weights + optimizer + activations live
+    on-device); only the checkpoint and migration traffic shrinks.
+    ``lora=True`` additionally prices *placement* as a LoRA finetune
+    (``predict_plans_shared(..., lora_rank=rank)``: frozen bf16 base +
+    adapter-only train state), shrinking ``slice_bytes`` so the jobs
+    become colocation harvesters — rng draw order is unchanged, so the
+    two modes see identical arrivals/models/ranks."""
     rng = random.Random(800 + seed)
     t, made = 0.0, 0
     while made < n_jobs:
@@ -173,7 +181,7 @@ def finetune_workload_iter(n_jobs: int, device_types: Sequence[str],
         seq = rng.choice([512, 1024])
         rank = rng.choice([8, 16, 32])
         job = _mk_job(rng, start_id + made, t, cfg, batch, seq, 1,
-                      device_types)
+                      device_types, lora_rank=rank if lora else 0)
         if job is None:
             continue
         minutes = rng.lognormvariate(math.log(mean_minutes), 0.8)
@@ -489,6 +497,109 @@ def serve_workload_iter(n_jobs: int, device_types: Sequence[str], *,
         jid += 1
 
 
+def serve_stream(n_jobs: int, device_types: Sequence[str], *,
+                 horizon: float = 4 * 3600.0, seed: int = 0,
+                 trace: str = "bursty", peak_mult: float = 6.0,
+                 static: bool = False, disaggregated: bool = False,
+                 start_id: int = 0
+                 ) -> Tuple[Iterator[SimJob], Iterator[RateEvent]]:
+    """Paired lazy ``(jobs, rate_events)`` streams over one underlying
+    ``serve_workload_iter`` — the streamed-run form of ``serve_workload``.
+
+    The engine's iterator path needs each source in nondecreasing time
+    order, but a job's rate curve spans its whole serving horizon, so the
+    list form must materialize and sort every event.  Here the two streams
+    share one generator: the rate stream keeps a heap keyed
+    ``(time, job_id)`` and pulls jobs ahead (into a buffer the job stream
+    drains) only until the earliest pending event is provably global-min —
+    an unpulled job arrives at ``t >= last_arrival`` and its events start
+    strictly after ``t``, so ``heap[0].time <= last_arrival`` is a safe
+    emission bound.  Memory is O(live serve jobs' pending events + jobs
+    pulled ahead), never O(total jobs), and rng draws happen in exactly
+    the list builder's order, so both streams are bit-identical to the
+    sorted list forms (streaming-rng discipline, PR 7 contract)."""
+    source = serve_workload_iter(n_jobs, device_types, horizon=horizon,
+                                 seed=seed, trace=trace,
+                                 peak_mult=peak_mult, static=static,
+                                 disaggregated=disaggregated,
+                                 start_id=start_id)
+    pending: deque = deque()                 # jobs pulled by the rate side
+    heap: List[tuple] = []                   # (time, job_id, seq, event)
+    state = {"done": False, "last_arrival": float("-inf"), "seq": 0}
+
+    def pull() -> Optional[SimJob]:
+        pair = next(source, None)
+        if pair is None:
+            state["done"] = True
+            return None
+        job, evs = pair
+        state["last_arrival"] = job.arrival
+        for e in evs:
+            heapq.heappush(heap, (e.time, e.job_id, state["seq"], e))
+            state["seq"] += 1
+        return job
+
+    def jobs_iter() -> Iterator[SimJob]:
+        while True:
+            if pending:
+                yield pending.popleft()
+                continue
+            job = pull()
+            if job is None:
+                return
+            yield job
+
+    def rate_iter() -> Iterator[RateEvent]:
+        while True:
+            while not state["done"] and (
+                    not heap or heap[0][0] > state["last_arrival"]):
+                job = pull()
+                if job is not None:
+                    pending.append(job)
+            if not heap:
+                return
+            yield heapq.heappop(heap)[3]
+
+    return jobs_iter(), rate_iter()
+
+
+def rate_events_iter(n_jobs: int, device_types: Sequence[str], *,
+                     horizon: float = 4 * 3600.0, seed: int = 0,
+                     trace: str = "bursty", peak_mult: float = 6.0,
+                     static: bool = False, disaggregated: bool = False,
+                     start_id: int = 0) -> Iterator[RateEvent]:
+    """Globally time-ordered rate-event stream on its own: the rate half
+    of ``serve_stream`` with the job half drained internally.  Useful when
+    the serve jobs are materialized separately (rng is deterministic, so
+    two passes see identical draws); ``list(rate_events_iter(...))`` is
+    bit-identical to the list form's events sorted by ``(time, job_id)``
+    — the order the engine's pre-push path uses.  Jobs are discarded as
+    they are pulled (not buffered), so memory is just the event heap."""
+    source = serve_workload_iter(n_jobs, device_types, horizon=horizon,
+                                 seed=seed, trace=trace,
+                                 peak_mult=peak_mult, static=static,
+                                 disaggregated=disaggregated,
+                                 start_id=start_id)
+    heap: List[tuple] = []
+    seq = 0
+    last_arrival = float("-inf")
+    done = False
+    while True:
+        while not done and (not heap or heap[0][0] > last_arrival):
+            pair = next(source, None)
+            if pair is None:
+                done = True
+                break
+            job, evs = pair
+            last_arrival = job.arrival
+            for e in evs:
+                heapq.heappush(heap, (e.time, e.job_id, seq, e))
+                seq += 1
+        if not heap:
+            return
+        yield heapq.heappop(heap)[3]
+
+
 def misprediction_oracle(*, severity: float = 0.5, frac: float = 0.2,
                          mild: float = 0.05, seed: int = 0
                          ) -> Callable:
@@ -503,11 +614,19 @@ def misprediction_oracle(*, severity: float = 0.5, frac: float = 0.2,
     across feedback-on/off arms.
 
     Returns an ``oom_check_fn(job, placements, pool)``: the true peak is
-    ``plan.pred_bytes * multiplier``; if it exceeds the smallest device
-    memory of the placement, the placement is doomed and the observed
-    peak is returned (else None).  Jobs admitted outside the HAS path
-    (no ``job.plan``) are not modelled.
+    ``plan.pred_bytes * multiplier``; if it exceeds the smallest per-device
+    memory *budget* of the placement, the placement is doomed and the
+    observed peak is returned (else None).  Budgets follow the pool's
+    reservation semantics: a whole-device placement — legacy tuple or
+    *exclusive* ``Grant`` — is judged against the node's physical device
+    memory (the host owns the card; its declared ``nbytes`` only bounds
+    the slack advertised to tenants, and a burst into unharvested slack
+    is not an OOM), while a fractional slice ``Grant`` is a hard byte
+    budget — colocated tenants OOM against their slice, not the card, so
+    mispredictions stay honest under fractional-GPU packing.  Jobs
+    admitted outside the HAS path (no ``job.plan``) are not modelled.
     """
+    from repro.core.has import Grant
     mults: Dict[Tuple, float] = {}
 
     def mult_for(job: SimJob) -> float:
@@ -527,7 +646,12 @@ def misprediction_oracle(*, severity: float = 0.5, frac: float = 0.2,
         if job.plan is None or job.cfg is None or not placements:
             return None
         true_peak = job.plan.pred_bytes * mult_for(job)
-        mem = min(pool.nodes[nid].mem for nid, _ in placements)
+        def budget(p):
+            if isinstance(p, Grant):
+                return p.nbytes if not p.exclusive else pool.nodes[p.node_id].mem
+            return pool.nodes[p[0]].mem
+
+        mem = min(budget(p) for p in placements)
         return true_peak if true_peak > mem else None
 
     return check

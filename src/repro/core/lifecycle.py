@@ -116,7 +116,7 @@ from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
 
 from repro.core import memtrace
 from repro.core.devices import DEVICE_TYPES
-from repro.core.has import Allocation, ClusterPool, Node
+from repro.core.has import Allocation, ClusterPool, Grant, Node
 from repro.core.marp import (ResourcePlan, default_ttft_slo,
                              p95_token_latency, prefill_service_seconds,
                              replicas_for_slo, serve_plan_capacity)
@@ -375,19 +375,38 @@ class _AdmissionShard:
     ``need_by_type`` maps each device type to the cheapest device count
     any plan of this list could use on it — the exact per-shard admission
     bound checked against ``ClusterPool.idle_by_type``.
-    """
-    __slots__ = ("sid", "pid", "plans", "need_by_type", "pre", "fifo")
 
-    def __init__(self, sid: int, pid: int, plans: Sequence[ResourcePlan]):
+    Colocation mode (PR 10) keys shards by ``(id(plans), harvest)``:
+    harvest-eligible jobs (serve / LoRA finetune under ``colocate=True``)
+    may start on slack bytes where whole-device jobs with the same plan
+    list cannot, so the two populations must not share a no-fit verdict.
+    Harvest shards add ``slice_need_by_type`` — the cheapest single-device
+    slice any plan could ride per type — checked against the pool's
+    free-bytes histogram as a second (necessary) eligibility bound.
+    """
+    __slots__ = ("sid", "pid", "plans", "need_by_type", "pre", "fifo",
+                 "harvest", "slice_need_by_type")
+
+    def __init__(self, sid: int, pid, plans: Sequence[ResourcePlan],
+                 harvest: bool = False):
         self.sid = sid                      # creation order (heap tie-break)
-        self.pid = pid                      # id(plans) — the bucket key
+        self.pid = pid                      # id(plans) [+ harvest] — the key
         self.plans = plans                  # pins the key's referent alive
+        self.harvest = harvest
         need: Dict[str, int] = {}
         for p in plans:
             cur = need.get(p.device_type)
             if cur is None or p.n_devices < cur:
                 need[p.device_type] = p.n_devices
         self.need_by_type = need
+        slice_need: Dict[str, int] = {}
+        if harvest:
+            for p in plans:
+                if p.n_devices == 1 and p.slice_bytes > 0:
+                    cur = slice_need.get(p.device_type)
+                    if cur is None or p.slice_bytes < cur:
+                        slice_need[p.device_type] = p.slice_bytes
+        self.slice_need_by_type = slice_need
         self.pre: List[Tuple[tuple, Job]] = []
         self.fifo: deque = deque()
 
@@ -397,16 +416,27 @@ class _AdmissionShard:
     def head(self) -> Tuple[tuple, Job]:
         return self.pre[0] if self.pre else self.fifo[0]
 
-    def eligible(self, idle_by_type: Dict[str, int]) -> bool:
+    def eligible(self, idle_by_type: Dict[str, int],
+                 pool: Optional[ClusterPool] = None) -> bool:
         """Necessary condition for ``select_plan(self.plans)`` to succeed:
         some device type's idle count covers its cheapest plan.  Exact as
         a skip test — a plan needs ``n_devices`` idle devices of its own
         type (memory classes only partition a type's idle count further),
         so when every type is below its cheapest plan, every plan is
-        unsatisfiable and a skipped shard provably admits nothing."""
+        unsatisfiable and a skipped shard provably admits nothing.
+
+        For a harvest shard (``pool`` passed by the slicing-mode pass),
+        slack may also satisfy a single-device plan: the per-type
+        power-of-two histogram test is a necessary condition for any slack
+        fit, so the skip stays provably safe (PR 7 shard-exactness
+        contract, extended to the byte axis)."""
         for dt, need in self.need_by_type.items():
             if idle_by_type.get(dt, 0) >= need:
                 return True
+        if self.harvest and pool is not None:
+            for dt, nbytes in self.slice_need_by_type.items():
+                if pool.slack_may_fit(dt, nbytes):
+                    return True
         return False
 
 
@@ -427,12 +457,20 @@ class AdmissionQueue:
     """
 
     def __init__(self):
-        self._shards: Dict[int, _AdmissionShard] = {}   # id(plans) -> shard
-        #: job_id -> (shard, entry key, need at insert) — keys are stable
-        #: while queued (progress/preemptions only change while running)
-        self._where: Dict[int, Tuple[_AdmissionShard, tuple, int]] = {}
+        self._shards: Dict[object, _AdmissionShard] = {}  # shard key -> shard
+        #: job_id -> (shard, entry key, need at insert, slice need) — keys
+        #: are stable while queued (progress/preemptions only change while
+        #: running)
+        self._where: Dict[int, Tuple[_AdmissionShard, tuple, int,
+                                     Optional[int]]] = {}
         self._need_counts: Dict[int, int] = {}          # min_devices -> n
+        #: cheapest single-device slice (bytes) per queued harvest job —
+        #: the slice analog of ``_need_counts``; empty unless colocating
+        self._slice_need_counts: Dict[int, int] = {}
         self._next_sid = 0
+        #: flipped by the engine in colocation mode: shards split on
+        #: harvest eligibility and the slice-need multiset goes live
+        self.colocate = False
 
     def __len__(self) -> int:
         return len(self._where)
@@ -449,11 +487,16 @@ class AdmissionQueue:
     def append(self, job: Job) -> None:
         assert job.job_id not in self._where, job.job_id
         key = _fifo_key(job)
-        pid = id(job.plans)
+        if self.colocate:
+            harvest = job.kind in ("serve", "finetune")
+            pid = (id(job.plans), harvest)
+        else:
+            harvest = False
+            pid = id(job.plans)
         shard = self._shards.get(pid)
         if shard is None:
             shard = self._shards[pid] = _AdmissionShard(self._next_sid, pid,
-                                                        job.plans)
+                                                        job.plans, harvest)
             self._next_sid += 1
         if job.preemptions:
             insort(shard.pre, (key, job))
@@ -469,7 +512,16 @@ class AdmissionQueue:
             else:
                 f.append((key, job))
         need = job.min_devices
-        self._where[job.job_id] = (shard, key, need)
+        slice_need = None
+        if harvest:
+            for p in job.plans:
+                if p.n_devices == 1 and p.slice_bytes > 0 and \
+                        (slice_need is None or p.slice_bytes < slice_need):
+                    slice_need = p.slice_bytes
+            if slice_need is not None:
+                self._slice_need_counts[slice_need] = \
+                    self._slice_need_counts.get(slice_need, 0) + 1
+        self._where[job.job_id] = (shard, key, need, slice_need)
         self._need_counts[need] = self._need_counts.get(need, 0) + 1
 
     def discard(self, job: Job) -> bool:
@@ -479,7 +531,7 @@ class AdmissionQueue:
         entry = self._where.pop(job.job_id, None)
         if entry is None:
             return False
-        shard, key, need = entry
+        shard, key, need, slice_need = entry
         if key[0] == 0:                     # preempted: sorted ``pre`` list
             i = bisect_left(shard.pre, (key,))
             assert i < len(shard.pre) and shard.pre[i][1] is job, job.job_id
@@ -492,7 +544,7 @@ class AdmissionQueue:
                     break
             else:
                 raise AssertionError(f"queue desync: job {job.job_id}")
-        self._removed(shard, need)
+        self._removed(shard, need, slice_need)
         return True
 
     def pop_head(self, shard: _AdmissionShard) -> Job:
@@ -501,11 +553,12 @@ class AdmissionQueue:
             _, job = shard.pre.pop(0)
         else:
             _, job = shard.fifo.popleft()
-        _, _, need = self._where.pop(job.job_id)
-        self._removed(shard, need)
+        _, _, need, slice_need = self._where.pop(job.job_id)
+        self._removed(shard, need, slice_need)
         return job
 
-    def _removed(self, shard: _AdmissionShard, need: int) -> None:
+    def _removed(self, shard: _AdmissionShard, need: int,
+                 slice_need: Optional[int] = None) -> None:
         if len(shard) == 0:
             del self._shards[shard.pid]
         c = self._need_counts[need] - 1
@@ -513,6 +566,12 @@ class AdmissionQueue:
             self._need_counts[need] = c
         else:
             del self._need_counts[need]
+        if slice_need is not None:
+            c = self._slice_need_counts[slice_need] - 1
+            if c:
+                self._slice_need_counts[slice_need] = c
+            else:
+                del self._slice_need_counts[slice_need]
 
     def min_need(self) -> float:
         """Min over queued jobs of ``min_devices`` (inf when empty) — the
@@ -522,6 +581,15 @@ class AdmissionQueue:
         if not self._need_counts:
             return float("inf")
         return min(self._need_counts)
+
+    def min_slice_need(self) -> float:
+        """Min over queued harvest-eligible jobs of their cheapest
+        single-device slice bytes (inf when none) — the byte analog of
+        ``min_need`` for the colocation-aware admission gate: the pool's
+        ``total_slack`` below this provably admits nothing via slack."""
+        if not self._slice_need_counts:
+            return float("inf")
+        return min(self._slice_need_counts)
 
     def shards(self) -> Iterable[_AdmissionShard]:
         return self._shards.values()
@@ -541,6 +609,20 @@ class AdmissionQueue:
         for j in jobs:
             scan[j.min_devices] = scan.get(j.min_devices, 0) + 1
         assert scan == self._need_counts, (scan, self._need_counts)
+        sscan: Dict[int, int] = {}
+        for s in self._shards.values():
+            if not s.harvest:
+                continue
+            for _, j in chain(s.pre, s.fifo):
+                sn = None
+                for p in j.plans:
+                    if p.n_devices == 1 and p.slice_bytes > 0 and \
+                            (sn is None or p.slice_bytes < sn):
+                        sn = p.slice_bytes
+                if sn is not None:
+                    sscan[sn] = sscan.get(sn, 0) + 1
+        assert sscan == self._slice_need_counts, \
+            (sscan, self._slice_need_counts)
 
 
 class SortedIdSet:
@@ -651,6 +733,11 @@ class Scheduler:
     #: this policy (see ``LifecycleEngine._fast_admit`` for the proof
     #: obligation) — only HAS-against-a-shared-pool sets it
     admits_single = False
+    #: the policy understands memory-slice (``Grant``) placements on a
+    #: slicing-enabled pool — required for ``colocate=True`` engines.
+    #: Snapshot-based policies copy whole-device idle counts only, so
+    #: they must not drive a sliced pool (byte budgets would be dropped).
+    supports_slicing = False
 
     def schedule(self, queued: List[Job], state: ClusterState
                  ) -> List[Tuple[Job, Tuple[Tuple[str, int], ...], int, int]]:
@@ -678,6 +765,7 @@ class HASAdmission(Scheduler):
     name = "has"
     applies_to_pool = True
     admits_single = True
+    supports_slicing = True
 
     def schedule(self, queued, state):
         if isinstance(state, ClusterPool):
@@ -688,22 +776,36 @@ class HASAdmission(Scheduler):
             return self._schedule_sharded(queued, pool)
         select_plan = pool.select_plan
         find_placements = pool.find_placements
+        slicing = pool.slicing
         out = []
         # Identical plan lists are shared objects (predict_plans_shared), and
         # within one pass capacity only shrinks (admissions take, nothing
         # frees) — so a plan list that found no feasible plan stays
         # infeasible for the rest of the pass.  Dedupe those no-fit walks by
-        # object identity.
+        # object identity (slicing splits the verdict on harvest
+        # eligibility: slack can admit what whole devices cannot).
         no_fit = set()
         for job in fifo_order(queued):
-            plans_key = id(job.plans)
-            if plans_key in no_fit:
-                continue                    # backfill: later jobs may fit
-            plan = select_plan(job.plans)
+            if slicing:
+                harvest = job.kind in ("serve", "finetune")
+                plans_key = (id(job.plans), harvest)
+                if plans_key in no_fit:
+                    continue                # backfill: later jobs may fit
+                plan = select_plan(job.plans, harvest=harvest)
+            else:
+                plans_key = id(job.plans)
+                if plans_key in no_fit:
+                    continue                # backfill: later jobs may fit
+                plan = select_plan(job.plans)
             if plan is None:
                 no_fit.add(plans_key)
                 continue
-            placements = find_placements(plan)
+            if slicing:
+                placements = find_placements(plan, harvest=harvest)
+                if placements is not None:
+                    placements = _wrap_grants(pool, plan, placements)
+            else:
+                placements = find_placements(plan)
             if placements is None:
                 continue
             pool.apply(placements)
@@ -735,20 +837,32 @@ class HASAdmission(Scheduler):
         idle_by_type = pool.idle_by_type
         select_plan = pool.select_plan
         find_placements = pool.find_placements
+        # slicing mode: eligibility also consults the pool's free-bytes
+        # histogram (harvest shards), selection/placement go through the
+        # harvest paths, and committed placements carry byte budgets
+        spool = pool if pool.slicing else None
         heap = []
         for shard in queue.shards():
-            if shard.eligible(idle_by_type):
+            if shard.eligible(idle_by_type, spool):
                 heap.append((shard.head()[0], shard.sid, shard))
         heapq.heapify(heap)
         out = []
         while heap:
             _, _, shard = heapq.heappop(heap)
-            if not shard.eligible(idle_by_type):
+            if not shard.eligible(idle_by_type, spool):
                 continue                    # shrank below its cheapest plan
-            plan = select_plan(shard.plans)
+            if spool is None:
+                plan = select_plan(shard.plans)
+            else:
+                plan = select_plan(shard.plans, harvest=shard.harvest)
             if plan is None:
                 continue                    # no-fit: drop shard this pass
-            placements = find_placements(plan)
+            if spool is None:
+                placements = find_placements(plan)
+            else:
+                placements = find_placements(plan, harvest=shard.harvest)
+                if placements is not None:
+                    placements = _wrap_grants(pool, plan, placements)
             if placements is None:          # unreachable on a consistent
                 continue                    # pool (select_plan just held)
             job = queue.pop_head(shard)
@@ -758,6 +872,23 @@ class HASAdmission(Scheduler):
             if len(shard):
                 heapq.heappush(heap, (shard.head()[0], shard.sid, shard))
         return out
+
+
+def _wrap_grants(pool: ClusterPool, plan: ResourcePlan,
+                 placements) -> tuple:
+    """Colocation mode: every committed placement carries a byte budget.
+    Whole-device ``(node_id, k)`` pairs become *exclusive* grants sized by
+    the plan's memtrace-corrected slice (so ``mem - slice_bytes`` is
+    harvestable slack); slice grants from the harvest placement path pass
+    through.  Plans without a byte budget (hand-built, ``slice_bytes=0``)
+    reserve the full device — opaque to harvesting, never oversubscribed."""
+    nodes = pool.nodes
+    return tuple(
+        p if isinstance(p, Grant) else
+        Grant(p[0], p[1],
+              min(plan.slice_bytes, nodes[p[0]].mem) if plan.slice_bytes > 0
+              else nodes[p[0]].mem)
+        for p in placements)
 
 
 def _record_plan(job: Job, plan: ResourcePlan,
@@ -831,13 +962,25 @@ class LifecycleEngine:
                  max_restarts: Optional[int] = None,
                  retain_jobs: bool = True,
                  on_complete: Optional[Callable[[Job], None]] = None,
-                 reset: bool = False):
+                 reset: bool = False,
+                 colocate: bool = False):
         self.pool = ClusterPool(nodes, reset=reset)
         self.scheduler = scheduler if scheduler is not None else HASAdmission()
         self._applies = self.scheduler.applied(self.pool)
         # arrive fast path: single-job admission against the shared pool,
         # exact only for schedulers that declare it (HASAdmission)
         self._admit_single = self._applies and self.scheduler.admits_single
+        # fractional-GPU packing (PR 10, opt-in): serve replicas and LoRA
+        # finetune jobs may harvest the slack bytes of running train jobs.
+        # Requires a slicing-aware policy driving the shared pool —
+        # snapshot schedulers copy whole-device counts only and would drop
+        # byte budgets on the floor.
+        self.colocate = colocate
+        if colocate:
+            assert self.scheduler.supports_slicing and self._applies, \
+                ("colocate=True requires a slicing-aware pool scheduler "
+                 f"(HASAdmission), got {self.scheduler.name}")
+            self.pool.enable_slicing()
         self.rate_fn = rate_fn
         self.charge_overhead = charge_overhead
         self.elastic = elastic
@@ -869,6 +1012,7 @@ class LifecycleEngine:
         self.peak_live_jobs = 0             # max concurrent tracked jobs
         self.jobs: Dict[int, Job] = {}
         self.queued: AdmissionQueue = AdmissionQueue()
+        self.queued.colocate = colocate
         self._events: List[tuple] = []      # (time, seq, kind, payload, epoch)
         self._seq = 0
         self._offline: Dict[str, Node] = {}   # departed nodes, by id
@@ -950,21 +1094,38 @@ class LifecycleEngine:
         this job's plans only, ignoring the rest of the queue."""
         if job.state != "queued":
             return False
-        alloc = self.pool.schedule(job.plans)
+        if self.colocate:
+            harvest = job.kind in ("serve", "finetune")
+            alloc = self.pool.schedule(job.plans, harvest=harvest)
+        else:
+            alloc = self.pool.schedule(job.plans)
         if alloc is None:
             return False
-        self.pool.apply(alloc.placements)
-        _record_plan(job, alloc.plan, alloc.placements, allocation=alloc)
+        if self.colocate:
+            placements = _wrap_grants(self.pool, alloc.plan, alloc.placements)
+            self.pool.apply(placements)
+            _record_plan(job, alloc.plan, placements)
+        else:
+            placements = alloc.placements
+            self.pool.apply(placements)
+            _record_plan(job, alloc.plan, placements, allocation=alloc)
         self.queued.discard(job)
-        self._start(job, alloc.placements, alloc.plan.d, alloc.plan.t, now)
+        self._start(job, placements, alloc.plan.d, alloc.plan.t, now)
         return True
 
     def _gate_open(self) -> bool:
         """Exact re-admission gate: only re-run the scheduler when the
         pool could fit some queued job's cheapest plan — a skipped run
-        provably admits nothing (ROADMAP invariant, PR 1)."""
-        return bool(self.queued) \
-            and self.pool.total_idle >= self.queued.min_need()
+        provably admits nothing (ROADMAP invariant, PR 1).  Colocation
+        adds the byte axis: slack covering some queued harvest job's
+        cheapest slice also opens the gate (necessary condition — a
+        single device's free bytes never exceed the pool total)."""
+        if not self.queued:
+            return False
+        if self.pool.total_idle >= self.queued.min_need():
+            return True
+        return self.colocate and \
+            self.pool.total_slack >= self.queued.min_slice_need()
 
     def complete_job(self, job_id: int, now: float = 0.0) -> None:
         """Live ``finish``: release capacity, restart queued jobs (the one
@@ -1277,7 +1438,11 @@ class LifecycleEngine:
         # pool, a full pass provably admits nothing — the O(1) gate check
         # *is* the admission decision, counted as one scheduler call so
         # ``sched_calls`` stays one-per-arrival like the ungated path.
-        if self.pool.total_idle < self.queued.min_need():
+        # (Colocation widens the gate with the slack-bytes bound; the
+        # extra check is short-circuited off the golden path.)
+        if self.pool.total_idle < self.queued.min_need() and not (
+                self.colocate
+                and self.pool.total_slack >= self.queued.min_slice_need()):
             self.sched_calls += 1
             if TRACER.enabled:              # the gate *is* the pass
                 tr = TRACER
@@ -1306,11 +1471,22 @@ class LifecycleEngine:
         (the live ``submit_job`` contract, golden-tested on the sim
         path)."""
         t0 = time.perf_counter()
-        alloc = self.pool.schedule(job.plans)
-        if alloc is not None:
-            self.pool.apply(alloc.placements)
-            _record_plan(job, alloc.plan, alloc.placements, allocation=alloc)
-            self.queued.discard(job)
+        if self.colocate:
+            harvest = job.kind in ("serve", "finetune")
+            alloc = self.pool.schedule(job.plans, harvest=harvest)
+            if alloc is not None:
+                placements = _wrap_grants(self.pool, alloc.plan,
+                                          alloc.placements)
+                self.pool.apply(placements)
+                _record_plan(job, alloc.plan, placements)
+                self.queued.discard(job)
+        else:
+            alloc = self.pool.schedule(job.plans)
+            if alloc is not None:
+                placements = alloc.placements
+                self.pool.apply(placements)
+                _record_plan(job, alloc.plan, placements, allocation=alloc)
+                self.queued.discard(job)
         elapsed = time.perf_counter() - t0
         self.sched_time_s += elapsed
         self.sched_time_by_kind["arrive"] = \
@@ -1332,7 +1508,7 @@ class LifecycleEngine:
         # a successful fast-admit pass and its admission are one-to-one:
         # the pass rides the job's ``adm`` trace record (``pass_wall``)
         # instead of a second ring emit on the hottest path
-        self._start(job, alloc.placements, alloc.plan.d, alloc.plan.t,
+        self._start(job, placements, alloc.plan.d, alloc.plan.t,
                     start, pass_wall=elapsed)
 
     def _run_scheduler(self, now: float, trigger: str = "other") -> None:
@@ -1575,6 +1751,8 @@ class LifecycleEngine:
             placements = self.pool.find_placements(best)
             if placements is None:
                 continue
+            if self.colocate:
+                placements = _wrap_grants(self.pool, best, placements)
             new_raw = self.rate_fn(job, placements, best.d, best.t)
             # compare effective rates: the candidate placement may carry a
             # different checkpoint interval (different device MTBF)
@@ -1758,11 +1936,21 @@ class LifecycleEngine:
         if job.state != "running" or job.plan is None:
             return
         target = max(1, min(target, job.max_replicas))
+        # colocation: extra replicas may ride slack bytes too (the
+        # admission placement already did); whole-device falls out of the
+        # harvest path when no slack fits
+        harvest = self.colocate and job.kind in ("serve", "finetune")
         changed = False
         while job.serve_replicas < target:
-            placements = self.pool.find_placements(job.plan)
+            if harvest:
+                placements = self.pool.find_placements(job.plan,
+                                                       harvest=True)
+            else:
+                placements = self.pool.find_placements(job.plan)
             if placements is None:
                 break                       # capacity tight; SLO will show it
+            if self.colocate:
+                placements = _wrap_grants(self.pool, job.plan, placements)
             self.pool.apply(placements)
             job.replica_placements.append(tuple(placements))
             self._register_placements(job.job_id, placements)
@@ -1784,9 +1972,16 @@ class LifecycleEngine:
         # target 0 == prefill_replicas — this block never runs for them)
         pf_target = self._prefill_target(job)
         while job.prefill_replicas < pf_target:
-            placements = self.pool.find_placements(job.prefill_plan)
+            if harvest:
+                placements = self.pool.find_placements(job.prefill_plan,
+                                                       harvest=True)
+            else:
+                placements = self.pool.find_placements(job.prefill_plan)
             if placements is None:
                 break                       # capacity tight; TTFT will show it
+            if self.colocate:
+                placements = _wrap_grants(self.pool, job.prefill_plan,
+                                          placements)
             self.pool.apply(placements)
             job.prefill_placements.append(tuple(placements))
             self._register_placements(job.job_id, placements)

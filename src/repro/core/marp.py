@@ -37,6 +37,16 @@ class ResourcePlan:
     pred_bytes: float             # predicted peak bytes/device
     score: float                  # ranking key (higher = better)
     zero: int = 1
+    #: per-device byte budget for fractional-GPU packing (PR 10): the
+    #: memtrace-corrected peak *without* the allocator-headroom margin —
+    #: the slice a colocated replica reserves on a shared device.  Sized
+    #: identically to ``min_mem`` (corrected peak / margin + 1) so the
+    #: no-repeat-OOM invariant of the memory feedback plane carries over
+    #: to slices; ``pred_bytes`` stays the raw model output (PR 4
+    #: contract).  0 on hand-built plans means "whole device only".
+    #: Derived metadata, excluded from plan identity so seed-equivalence
+    #: comparisons against pre-slicing plan tuples still hold.
+    slice_bytes: int = field(default=0, compare=False)
 
     @property
     def min_mem_gb(self) -> float:
@@ -104,11 +114,18 @@ def predict_plans(cfg: ModelConfig, global_batch: int, seq: int, *,
                   max_devices: int = 512,
                   zero: int = 1,
                   mode: str = "exact",
-                  max_t: int = 64) -> List[ResourcePlan]:
+                  max_t: int = 64,
+                  lora_rank: int = 0) -> List[ResourcePlan]:
     """Enumerate (d, t) plans, keep feasible ones, rank by score (desc).
 
     mode='paper' uses the paper's GPT formulas verbatim; mode='exact' uses the
     generalised per-family model (DESIGN.md §4).
+
+    ``lora_rank > 0`` prices a LoRA finetune instead of full training
+    (``memory_model.lora_peak_bytes``: frozen bf16 base + adapter-only
+    train state) — much smaller peaks, so the plans' ``slice_bytes``
+    fit the slack of colocated train jobs.  The default 0 is bit-identical
+    to the pre-LoRA sweep.
 
     The sweep is memoized on ``(cfg, batch, seq, device_types, zero, mode,
     max_devices, max_t, calibration.cache_token(),
@@ -128,7 +145,8 @@ def predict_plans(cfg: ModelConfig, global_batch: int, seq: int, *,
                                       max_devices, zero, mode, max_t,
                                       calibration.cache_token(),
                                       memtrace.cache_token(),
-                                      reliability.cache_token()))
+                                      reliability.cache_token(),
+                                      lora_rank))
 
 
 def predict_plans_shared(cfg: ModelConfig, global_batch: int, seq: int, *,
@@ -136,7 +154,8 @@ def predict_plans_shared(cfg: ModelConfig, global_batch: int, seq: int, *,
                          max_devices: int = 512,
                          zero: int = 1,
                          mode: str = "exact",
-                         max_t: int = 64) -> Tuple[ResourcePlan, ...]:
+                         max_t: int = 64,
+                         lora_rank: int = 0) -> Tuple[ResourcePlan, ...]:
     """``predict_plans`` returning the memoized tuple itself (immutable, so
     sharing is safe).  Identical inputs yield the *same object*, which lets
     schedulers dedupe repeated no-fit checks across jobs by plan-list
@@ -146,7 +165,8 @@ def predict_plans_shared(cfg: ModelConfig, global_batch: int, seq: int, *,
                                  max_devices, zero, mode, max_t,
                                  calibration.cache_token(),
                                  memtrace.cache_token(),
-                                 reliability.cache_token())
+                                 reliability.cache_token(),
+                                 lora_rank)
 
 
 @lru_cache(maxsize=4096)
@@ -155,7 +175,8 @@ def _predict_plans_cached(cfg: ModelConfig, global_batch: int, seq: int,
                           zero: int, mode: str, max_t: int,
                           cal_token: Tuple = ("off",),
                           mem_token: Tuple = ("off",),
-                          rel_token: Tuple = ("off",)
+                          rel_token: Tuple = ("off",),
+                          lora_rank: int = 0
                           ) -> Tuple[ResourcePlan, ...]:
     plans: List[ResourcePlan] = []
     d_candidates = [x for x in _pow2_divisors(global_batch) if x <= max_devices]
@@ -170,6 +191,9 @@ def _predict_plans_cached(cfg: ModelConfig, global_batch: int, seq: int,
             while t <= max_t and d * t <= max_devices:
                 if mode == "paper":
                     pred = mm.paper_peak_bytes(cfg, global_batch, seq, d, t)
+                elif lora_rank > 0:
+                    pred = mm.lora_peak_bytes(cfg, global_batch, seq, d, t,
+                                              rank=lora_rank, zero=zero)
                 else:
                     pred = mm.exact_peak_bytes(cfg, global_batch, seq, d, t,
                                                zero=zero)
@@ -186,11 +210,12 @@ def _predict_plans_cached(cfg: ModelConfig, global_batch: int, seq: int,
                         # checkpoint stalls, and can rank below a smaller
                         # or more reliable one (PR 8)
                         score *= reliability.expected_goodput(
-                            cfg, dt_name, d * t, lora_rank=0)
+                            cfg, dt_name, d * t, lora_rank=lora_rank)
                     plans.append(ResourcePlan(
                         n_devices=d * t, min_mem=int(adj / margin) + 1,
                         d=d, t=t, device_type=dt_name, pred_bytes=pred,
-                        score=score, zero=zero))
+                        score=score, zero=zero,
+                        slice_bytes=int(adj / margin) + 1))
                     break          # larger t only wastes devices for this d
                 t *= 2
     plans.sort(key=lambda p: (-p.score, p.n_devices, p.t))
@@ -422,7 +447,8 @@ def _predict_serve_plans_cached(cfg: ModelConfig, batch: int, cache_len: int,
                     plans.append(ResourcePlan(
                         n_devices=d * t, min_mem=int(adj / margin) + 1,
                         d=d, t=t, device_type=dt_name, pred_bytes=pred,
-                        score=rate / ((d * t) ** 0.9), zero=0))
+                        score=rate / ((d * t) ** 0.9), zero=0,
+                        slice_bytes=int(adj / margin) + 1))
                     break
                 t *= 2
     plans.sort(key=lambda p: (-p.score, p.n_devices, p.t))

@@ -251,6 +251,41 @@ def exact_peak_bytes(cfg: ModelConfig, global_batch: int, seq: int,
             + XLA_RUNTIME_OVERHEAD)
 
 
+def lora_param_count(cfg: ModelConfig, rank: int) -> int:
+    """Trainable adapter params of a LoRA finetune: the A+B factor pair
+    (``2 * d_model * rank`` params) on each of the four attention
+    projections per layer — the same adapter shape
+    ``ckpt.checkpoint.lora_state_bytes`` serializes."""
+    return 4 * 2 * cfg.d_model * rank * cfg.num_layers
+
+
+@lru_cache(maxsize=8192)
+def lora_peak_bytes(cfg: ModelConfig, global_batch: int, seq: int,
+                    d: int, t: int, *, rank: int, zero: int = 1,
+                    microbatch: int = 0, remat: str = "block") -> float:
+    """Predicted peak bytes/device of a LoRA finetune under plan (d, t).
+
+    The frozen base model still streams through every device (bf16 params,
+    2 B/param, tensor-sharded) and the forward/backward activations are
+    those of full training — gradients flow through the base layers to
+    reach the adapters — but the 18 B/param grad + optimizer + update
+    state exists only for the adapter params (20 B/param on them,
+    ZeRO-shardable).  That is what makes mid-sized finetunes *small*:
+    a few-GB slice instead of a whole card, the sliceable end of the
+    fractional-GPU packing axis."""
+    shard_batch = max(global_batch // d, 1)
+    mb = microbatch or min(shard_batch, 1)
+    mb = max(min(mb, shard_batch), 1)
+    W = analytic_param_count(cfg)
+    frozen = 2.0 * W / t                       # bf16 base, no train state
+    A = lora_param_count(cfg, rank)
+    denom = (t * d) if zero >= 1 else t
+    adapter = 20.0 * A / denom                 # full train state, adapters only
+    return (frozen + adapter
+            + activation_bytes(cfg, seq, mb, t, remat)
+            + XLA_RUNTIME_OVERHEAD)
+
+
 # -------------------------------------------------------- XLA accounting ----
 
 def xla_peak_bytes(ma) -> int:

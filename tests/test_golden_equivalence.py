@@ -674,6 +674,37 @@ def test_simulation_failure_free_identical_after_failure_run():
         assert g.rate == w.rate, w.job_id
 
 
+def test_simulation_colocate_off_identical_after_colocated_run():
+    """Fractional-GPU packing is opt-in and additive: after a colocated
+    mixed train+serve+finetune simulation (slice grants, slack
+    harvesting, harvest-keyed admission shards) in the same process, a
+    ``colocate=False`` simulation must stay bit-identical to the seed
+    event loop — no slicing state may leak through the shared pool, the
+    scheduler, the plan cache, or the admission queue."""
+    from repro.cluster.traces import finetune_workload, serve_workload
+    nodes = make_cluster(PAPER_SIM_CLUSTER)
+    types = sorted({n.device_type for n in nodes})
+    want = _seed_simulate(new_workload(30, types, seed=13),
+                          copy.deepcopy(nodes))
+    tjobs = new_workload(12, types, seed=4)
+    sjobs, revs = serve_workload(6, types, horizon=3600.0, seed=2,
+                                 start_id=100_000)
+    fjobs = finetune_workload(6, types, seed=2, start_id=200_000)
+    mixed = sorted(tjobs + sjobs + fjobs,
+                   key=lambda j: (j.arrival, j.job_id))
+    cres = simulate(mixed, copy.deepcopy(nodes), FrenzyScheduler(),
+                    charge_overhead=False, rate_events=revs, colocate=True)
+    assert cres.scale_ups > 0               # the serve machinery actually ran
+    got = simulate(new_workload(30, types, seed=13), copy.deepcopy(nodes),
+                   FrenzyScheduler(), charge_overhead=False).jobs
+    for w, g in zip(sorted(want, key=lambda j: j.job_id),
+                    sorted(got, key=lambda j: j.job_id)):
+        assert g.placements == w.placements, w.job_id
+        assert g.start_time == w.start_time, w.job_id
+        assert g.finish_time == w.finish_time, w.job_id
+        assert g.rate == w.rate, w.job_id
+
+
 def test_predict_serve_plans_decode_table_round_trip_stays_golden():
     """The serve rate-model refactor routes bandwidth through
     ``calibration.decode_bw_for``: with the decode table off the sweep
